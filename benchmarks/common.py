@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: graph loading at benchmark scale + CSV out."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.configs.tcim_graphs import GRAPHS
+from repro.data.graph_pipeline import load_graph
+
+# Per-graph scale factors: full-size where a single CPU core handles it in
+# seconds, reduced for the two largest (noted in the output).
+BENCH_SCALE = {
+    "ego-facebook": 1.0,
+    "email-enron": 1.0,
+    "com-amazon": 1.0,
+    "com-dblp": 1.0,
+    "com-youtube": 0.5,
+    "roadnet-pa": 1.0,
+    "roadnet-tx": 0.75,
+    "roadnet-ca": 0.5,
+    "com-livejournal": 0.08,
+}
+
+
+def bench_graphs(names=None, slice_bits: int = 64):
+    for name, cfg in GRAPHS.items():
+        if names and name not in names:
+            continue
+        scaled = cfg.scaled(BENCH_SCALE.get(name, 1.0))
+        g, sbf, wl = load_graph(scaled, slice_bits)
+        yield name, cfg, scaled, g, sbf, wl
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Required CSV row format: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

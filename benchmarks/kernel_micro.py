@@ -1,0 +1,43 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-path timing;
+TPU performance comes from the §Roofline model, not these numbers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    p, w = 1 << 16, 2
+    rows = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    cols = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    us = _time(lambda a, b: ops.popcount_and_total(a, b), rows, cols)
+    emit("kernel/popcount_and_total_64kpairs", us, f"words={p*w}")
+    us = _time(lambda a, b: ref.ref_popcount_and_total(a, b), rows, cols)
+    emit("kernel/ref_popcount_total_64kpairs", us, "oracle")
+    x = jnp.asarray(rng.integers(0, 2**32, (512, 16), dtype=np.uint32))
+    us = _time(lambda a: ops.bitgemm(a, a), x)
+    emit("kernel/bitgemm_512x512x16w", us, "")
+    n = 512
+    a = jnp.asarray(np.triu(rng.random((n, n)) < 0.05, 1).astype(np.float32))
+    us = _time(lambda m: ops.dense_mxu_tc(m, block=128), a)
+    emit("kernel/dense_mxu_tc_512", us, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""LM roofline summary: tabulates the dry-run records (results/dryrun/).
+
+Not a paper table — this backs EXPERIMENTS.md §Roofline for the assigned
+architectures. Run the dry-run sweep first (python -m repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run() -> list[dict]:
+    rows = []
+    if not RESULTS.exists():
+        emit("lm_roofline/missing", 0.0, "run dryrun sweep first")
+        return rows
+    for f in sorted(RESULTS.glob("*__single.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped") or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        derived = (
+            f"dominant={rl['dominant']};compute_s={rl['compute_s']:.3f};"
+            f"memory_s={rl['memory_s']:.3f};collective_s={rl['collective_s']:.3f};"
+            f"useful_flops_ratio={r.get('useful_flops_ratio', 0):.3f}"
+        )
+        emit(f"lm_roofline/{r['arch']}__{r['shape']}", rl["step_lower_bound_s"] * 1e6, derived)
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fault tolerance demo: injected failures + checkpoint/auto-resume.
+
+Trains with failures injected at steps 40 and 110; the supervisor restarts
+from the last committed checkpoint each time. Because the data pipeline is
+deterministic per step, the final loss equals an uninterrupted run's.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import TrainLoop, run_with_auto_resume
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector
+
+
+def main():
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        common = dict(
+            smoke=True,
+            global_batch=4,
+            seq=32,
+            ckpt_every=25,
+            opt=AdamWConfig(lr=1e-3, weight_decay=0.0),
+        )
+        steps = 150
+
+        print("== run A: no failures ==")
+        loop_a = TrainLoop("smollm-135m", ckpt_dir=None, **common)
+        loop_a.run(steps)
+        loss_a = loop_a.metrics_log[-1]["loss"]
+
+        print("\n== run B: failures at steps 40 and 110, auto-resume ==")
+        loop_b = TrainLoop("smollm-135m", ckpt_dir=ckpt_dir, **common)
+        injector = FailureInjector(fail_at_steps=(40, 110))
+        (_, _, _), restarts = run_with_auto_resume(loop_b, steps, injector)
+        loss_b = loop_b.metrics_log[-1]["loss"]
+
+        print(f"\nfinal loss without failures: {loss_a:.6f}")
+        print(f"final loss with {restarts} restarts: {loss_b:.6f}")
+        print("bit-exact resume" if abs(loss_a - loss_b) < 1e-5 else
+              f"delta={abs(loss_a-loss_b):.2e} (restart replays the last "
+              "checkpoint interval; numerics identical on the same backend)")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end LM training driver example.
+
+Default: a ~10M-parameter reduction of smollm-135m for 300 steps on CPU —
+loss falls well below ln(V) on the structured synthetic stream. ``--full``
+trains the real 135M-parameter config (same code path, longer wall-clock).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full] \
+        [--arch smollm-135m]
+"""
+import argparse
+import math
+
+from repro.configs import get_config
+from repro.launch.train import TrainLoop
+from repro.optim import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="train the full config (135M for smollm) instead of the ~10M reduction",
+    )
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    cfg = None
+    if not args.full:
+        cfg = base.scaled(
+            n_layers=6,
+            d_model=256,
+            n_heads=4,
+            n_kv_heads=2,
+            head_dim=64,
+            d_ff=1024 if base.d_ff else 0,
+            remat="none",
+        )
+    loop = TrainLoop(
+        args.arch,
+        cfg_override=cfg,
+        global_batch=args.global_batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        opt=AdamWConfig(lr=3e-3, weight_decay=0.01),
+    )
+    n_params = loop.cfg.param_count()
+    print(
+        f"training {args.arch}{'' if args.full else ' (reduced)'}: "
+        f"{n_params/1e6:.1f}M params, {args.steps} steps, "
+        f"batch={args.global_batch} seq={args.seq}"
+    )
+    loop.run(args.steps)
+    losses = [m["loss"] for m in loop.metrics_log]
+    print(
+        f"first loss={losses[0]:.4f}  last loss={losses[-1]:.4f}  "
+        f"(ln V = {math.log(loop.cfg.vocab):.3f})"
+    )
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.analysis.hlo_parse import collective_bytes_from_hlo
+from repro.analysis.roofline import roofline_terms
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms"]

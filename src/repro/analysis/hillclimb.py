@@ -1,0 +1,300 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver — hypothesis -> change -> re-lower -> record, for the
+# three selected cells (worst roofline fraction / most collective-bound /
+# most representative of the paper's technique):
+#
+#   A. minicpm3-4b  x train_4k   (worst roofline fraction)
+#   B. moonshot-v1-16b-a3b x train_4k  (most collective-bound)
+#   C. tcim distributed TC (the paper's own technique; wall-clock measured)
+#
+# Results land in results/perf/<cell>.json; EXPERIMENTS.md §Perf narrates.
+#
+#   PYTHONPATH=src python -m repro.analysis.hillclimb [--cell A|B|C|all]
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.analysis.hlo_cost import hlo_cost
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import get_config
+from repro.distributed.constants import HBM_BW
+from repro.distributed.ctx import activation_scope, arch_profile
+from repro.kernels.flash_attention import flash_io_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import CellSpec
+from repro.launch.steps import make_train_step
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def lower_train(cfg, arch: str, microbatches: int):
+    mesh = make_production_mesh()
+    spec = CellSpec(arch, "train_4k")
+    spec.cfg = cfg
+    args = spec.args()
+    step = make_train_step(cfg, mesh, args[2], microbatches=microbatches)
+    t0 = time.perf_counter()
+    with activation_scope(cfg, mesh):
+        compiled = step.lower(*args).compile()
+    compile_s = time.perf_counter() - t0
+    hc = hlo_cost(compiled.as_text(), tags={"attn": "attn_core"})
+    ma = compiled.memory_analysis()
+    peak = (
+        ma.argument_size_in_bytes
+        + ma.temp_size_in_bytes
+        + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes
+    ) / 1e9
+    tokens = 256 * 4096
+    mf = model_flops("train", cfg.active_param_count(), tokens) / 256
+    rec = {
+        "flops": hc.flops,
+        "bytes": hc.bytes,
+        "coll": hc.collective_bytes,
+        "attn_bytes": (hc.bytes_by_tag or {}).get("attn", 0.0),
+        "peak_gb": peak,
+        "compile_s": round(compile_s, 1),
+        "useful_ratio": mf / hc.flops if hc.flops else 0,
+        **roofline_terms(hc.flops, hc.bytes, hc.collective_bytes),
+    }
+    return rec
+
+
+def _log(cell, recs, it):
+    print(f"[{cell}] {it['name']}: compute={it['after']['compute_s']:.2f}s "
+          f"memory={it['after']['memory_s']:.2f}s coll={it['after']['collective_s']:.2f}s "
+          f"peak={it['after']['peak_gb']:.1f}GB -> {it['verdict']}")
+    recs.append(it)
+
+
+def flash_adjust(rec, cfg, n_layers, heads, sq, hd, batch_per_dev, mb, extra_pairs=0):
+    """Kernel-adjusted memory term: swap measured attn_core bytes for the
+    flash kernel's analytic IO (per device per step)."""
+    flash = flash_io_bytes(batch_per_dev, heads, sq, sq, hd, train=True)
+    flash_total = flash * n_layers * mb + extra_pairs
+    adj_bytes = rec["bytes"] - rec["attn_bytes"] + flash_total
+    out = dict(rec)
+    out["bytes"] = adj_bytes
+    out["memory_s"] = adj_bytes / HBM_BW
+    out.update(
+        {k: v for k, v in roofline_terms(rec["flops"], adj_bytes, rec["coll"]).items()}
+    )
+    out["flash_bytes"] = flash_total
+    return out
+
+
+def cell_a():
+    """minicpm3-4b train_4k — worst roofline fraction (memory-bound)."""
+    arch = "minicpm3-4b"
+    recs = []
+    base_cfg = get_config(arch)
+    base = lower_train(base_cfg, arch, 8)
+    print(f"[A] baseline: compute={base['compute_s']:.2f}s memory={base['memory_s']:.2f}s "
+          f"coll={base['collective_s']:.2f}s attn_bytes={base['attn_bytes']:.3e} "
+          f"peak={base['peak_gb']:.1f}GB")
+    recs.append({"name": "baseline (paper-faithful substrate, mb=8)", "after": base,
+                 "hypothesis": "-", "verdict": "baseline"})
+
+    # Iter 1: flash-attention kernel (analytic adjustment, kernel validated).
+    # Hypothesis: attn_core (scores/softmax traffic) dominates the memory
+    # term; fusing to the Pallas flash kernel cuts it to Q+K+V+O (~64x less
+    # score traffic at S=4096, f32 scores, 40 heads).
+    after = flash_adjust(
+        base, base_cfg, n_layers=62, heads=40, sq=4096,
+        hd=96, batch_per_dev=2, mb=8,
+    )
+    _log("A", recs, {
+        "name": "flash-attention Pallas kernel (kernel-adjusted)",
+        "hypothesis": "attn score traffic ~dominates memory term; flash IO = QKVO only",
+        "before": base, "after": after,
+        "verdict": f"memory {base['memory_s']:.1f}s -> {after['memory_s']:.1f}s "
+                   f"({1 - after['memory_s']/base['memory_s']:.0%} cut)" ,
+    })
+
+    # Iter 2: remat 'dots' — memory headroom exists after flash; saving dot
+    # outputs removes the bwd recompute (~25% of flops).
+    cfg2 = dataclasses.replace(base_cfg, remat="dots")
+    r2 = lower_train(cfg2, arch, 8)
+    a2 = flash_adjust(r2, cfg2, 62, 40, 4096, 96, 2, 8)
+    _log("A", recs, {
+        "name": "remat full->dots (+flash adj)",
+        "hypothesis": "with flash, memory headroom allows saving dot outputs; "
+                      "removes ~2ND recompute flops (compute term -25%)",
+        "before": after, "after": a2,
+        "verdict": f"compute {after['compute_s']:.2f}s -> {a2['compute_s']:.2f}s, "
+                   f"peak {after['peak_gb']:.1f} -> {a2['peak_gb']:.1f}GB",
+    })
+
+    # Iter 3: wider attention chunks (512 -> 2048): fewer scan steps, less
+    # per-chunk mask/bookkeeping traffic in the XLA path.
+    cfg3 = dataclasses.replace(base_cfg, remat="dots", attn_chunk=2048,
+                               long_context_threshold=2048)
+    r3 = lower_train(cfg3, arch, 8)
+    a3 = flash_adjust(r3, cfg3, 62, 40, 4096, 96, 2, 8)
+    _log("A", recs, {
+        "name": "attn chunk 512->2048 (+dots, +flash adj)",
+        "hypothesis": "larger q-chunks amortize mask/position bookkeeping",
+        "before": a2, "after": a3,
+        "verdict": f"memory {a2['memory_s']:.2f}s -> {a3['memory_s']:.2f}s",
+    })
+    return recs
+
+
+def cell_b():
+    """moonshot train_4k — most collective-bound (36% of step time)."""
+    arch = "moonshot-v1-16b-a3b"
+    recs = []
+    base_cfg = get_config(arch)
+    base = lower_train(base_cfg, arch, 16)
+    print(f"[B] baseline: compute={base['compute_s']:.2f}s memory={base['memory_s']:.2f}s "
+          f"coll={base['collective_s']:.2f}s peak={base['peak_gb']:.1f}GB")
+    recs.append({"name": "baseline (ZeRO-3, mb=16)", "after": base,
+                 "hypothesis": "-", "verdict": "baseline"})
+
+    # Iter 1: fewer microbatches. Hypothesis: FSDP weight all-gathers scale
+    # with mb; memory headroom (temp ~3.5GB at mb=8) allows mb=8 -> halve
+    # the gather traffic.
+    r1 = lower_train(base_cfg, arch, 8)
+    _log("B", recs, {
+        "name": "microbatches 16->8",
+        "hypothesis": "weight gathers scale ~linearly with mb; memory allows 8",
+        "before": base, "after": r1,
+        "verdict": f"coll {base['collective_s']:.2f}s -> {r1['collective_s']:.2f}s",
+    })
+
+    # Iter 2: drop ZeRO-3 -> TP/EP-only param storage (zero3=False).
+    # Hypothesis: a 16B fine-grained MoE's per-chip EP shard (~1GB) fits
+    # without ZeRO-3; replicating over 'data' removes per-layer weight
+    # gathers entirely (moments stay ZeRO-1-sharded).
+    cfg2 = dataclasses.replace(base_cfg, zero3=False)
+    r2 = lower_train(cfg2, arch, 8)
+    _log("B", recs, {
+        "name": "ZeRO-3 -> EP/TP-only params (ZeRO-1 moments)",
+        "hypothesis": "EP shard fits per-chip; kills FSDP all-gathers",
+        "before": r1, "after": r2,
+        "verdict": f"coll {r1['collective_s']:.2f}s -> {r2['collective_s']:.2f}s, "
+                   f"peak {r1['peak_gb']:.1f} -> {r2['peak_gb']:.1f}GB",
+    })
+
+    # Iter 3: + flash adjustment (16 heads, hd 128).
+    a3 = flash_adjust(r2, cfg2, 48, 16, 4096, 128, 1, 8)
+    _log("B", recs, {
+        "name": "+ flash-attention kernel (kernel-adjusted)",
+        "hypothesis": "remaining memory term still carries unfused scores",
+        "before": r2, "after": a3,
+        "verdict": f"memory {r2['memory_s']:.2f}s -> {a3['memory_s']:.2f}s",
+    })
+    return recs
+
+
+def cell_c():
+    """TCIM distributed — the paper's technique; measured wall-clock on CPU
+    (execute stage) + dry-run terms for the 512-chip mesh."""
+    from repro.core import build_sbf, build_worklist
+    from repro.core.tcim import _execute_worklist
+    from repro.graphs import build_graph, rmat
+
+    recs = []
+    edges = rmat(200_000, 1_500_000, seed=13)
+    g = build_graph(edges, reorder=True)
+    sbf = build_sbf(g)
+    wl = build_worklist(g, sbf)
+
+    def timed_execute(wl_local, chunk):
+        t0 = time.perf_counter()
+        n = _execute_worklist(sbf, wl_local, "jnp", chunk)
+        return n, time.perf_counter() - t0
+
+    # Baseline: work list in row-major (edge) order, chunk 1M.
+    count, t_base = timed_execute(wl, 1 << 20)
+    count, t_base = timed_execute(wl, 1 << 20)  # warm
+    recs.append({"name": f"baseline row-major worklist ({wl.num_pairs} pairs)",
+                 "hypothesis": "-", "after": {"execute_s": t_base},
+                 "verdict": f"{t_base:.3f}s"})
+    print(f"[C] baseline execute: {t_base:.3f}s ({wl.num_pairs} pairs)")
+
+    # Iter 1: sort pairs by column-slice id. Hypothesis: the gather of
+    # column slice words is the bandwidth hot spot (Fig.5's LRU insight);
+    # sorting makes those gathers sequential (the TPU/CPU analogue of the
+    # paper's 72% WRITE saving).
+    import dataclasses as dc
+
+    order = np.argsort(wl.pair_col_pos, kind="stable")
+    wl_sorted = dc.replace(
+        wl,
+        pair_edge=wl.pair_edge[order],
+        pair_row_pos=wl.pair_row_pos[order],
+        pair_col_pos=wl.pair_col_pos[order],
+    )
+    count2, t_sorted = timed_execute(wl_sorted, 1 << 20)
+    assert count2 == count
+    recs.append({
+        "name": "column-sorted worklist (paper's data-reuse, TPU-adapted)",
+        "hypothesis": "column gathers dominate; sorting makes them contiguous",
+        "after": {"execute_s": t_sorted},
+        "verdict": f"{t_base:.3f}s -> {t_sorted:.3f}s "
+                   f"({1 - t_sorted / t_base:+.0%})",
+    })
+    print(f"[C] column-sorted: {t_sorted:.3f}s ({1 - t_sorted/t_base:.0%} faster)")
+
+    # Iter 2: chunk-size sweep (VMEM-resident working set on TPU; XLA CPU
+    # buffer locality here).
+    best = (None, 1e9)
+    sweep = {}
+    for chunk in (1 << 18, 1 << 20, 1 << 22):
+        _, t = timed_execute(wl_sorted, chunk)
+        sweep[str(chunk)] = t
+        if t < best[1]:
+            best = (chunk, t)
+    recs.append({
+        "name": "chunk-size sweep (sorted)",
+        "hypothesis": "chunk ~ working set; too small = dispatch overhead, "
+                      "too big = cache thrash",
+        "after": {"sweep": sweep, "best_chunk": best[0], "execute_s": best[1]},
+        "verdict": f"best chunk={best[0]}: {best[1]:.3f}s",
+    })
+    print(f"[C] chunk sweep: {sweep} -> best {best[0]}")
+
+    # Iter 3: kernel-adjusted HBM model for the 512-chip dry-run cell:
+    # jnp path materializes gathered rows+cols and per-word popcounts;
+    # the fused Pallas kernel reads indices (8B) + slice words (16B) per
+    # pair and writes one scalar per block.
+    pairs = 1 << 26
+    jnp_bytes = pairs * (8 + 16 + 16 + 8 + 4)  # idx + gathers out + AND in + pc + part
+    kern_bytes = pairs * (8 + 16)
+    recs.append({
+        "name": "fused AND+popcount kernel vs jnp path (512-chip model)",
+        "hypothesis": "gather outputs re-materialize in the jnp path; the "
+                      "Pallas kernel streams them once",
+        "after": {"jnp_bytes_per_chip": jnp_bytes / 512,
+                  "kernel_bytes_per_chip": kern_bytes / 512,
+                  "memory_s_jnp": jnp_bytes / 512 / HBM_BW,
+                  "memory_s_kernel": kern_bytes / 512 / HBM_BW},
+        "verdict": f"memory term x{jnp_bytes / kern_bytes:.1f} lower with the kernel",
+    })
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["A", "B", "C", "all"], default="all")
+    args = ap.parse_args()
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    cells = {"A": cell_a, "B": cell_b, "C": cell_c}
+    selected = cells if args.cell == "all" else {args.cell: cells[args.cell]}
+    for name, fn in selected.items():
+        recs = fn()
+        (PERF_DIR / f"cell_{name}.json").write_text(json.dumps(recs, indent=1))
+        print(f"[{name}] written ({len(recs)} iterations)")
+
+
+if __name__ == "__main__":
+    main()

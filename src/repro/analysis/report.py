@@ -1,0 +1,114 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from results/dryrun/.
+
+    PYTHONPATH=src python -m repro.analysis.report [--out EXPERIMENTS.md]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.distributed.constants import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load_records():
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def _peak_gb(r) -> float | None:
+    m = r.get("memory", {})
+    if "argument_size_in_bytes" not in m:
+        return None
+    return (
+        m["argument_size_in_bytes"]
+        + m.get("temp_size_in_bytes", 0)
+        + m.get("output_size_in_bytes", 0)
+        - m.get("alias_size_in_bytes", 0)
+    ) / 1e9
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | peak GB/chip | fits 16GB | HLO flops/dev | HBM bytes/dev | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("kind") == "tc":
+            continue
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP: {r['skip_reason']} | — | — | — | — | — | — |"
+            )
+            continue
+        if "error" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — | — | — |"
+            )
+            continue
+        peak = _peak_gb(r)
+        fits = "yes" if peak is not None and peak <= 16.0 else "NO"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']} | "
+            f"{peak:.2f} | {fits} | {r['flops_per_device']:.3e} | "
+            f"{r['bytes_per_device']:.3e} | {r['collectives']['total_bytes']:.3e} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | bound s | MODEL_FLOPS/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped") or "roofline" not in r or r["mesh"] != "single":
+            continue
+        rl = r["roofline"]
+        ratio = r.get("useful_flops_ratio", 0.0)
+        coll = r["collectives"]
+        note = ""
+        if coll.get("unknown_trip_whiles"):
+            note = f"{coll['unknown_trip_whiles']} unknown-trip loops"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | {rl['memory_s']:.4f} | "
+            f"{rl['collective_s']:.4f} | {rl['dominant']} | {rl['step_lower_bound_s']:.4f} | "
+            f"{ratio:.3f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def summarize(recs) -> dict:
+    runnable = [r for r in recs if not r.get("skipped") and "roofline" in r]
+    skipped = [r for r in recs if r.get("skipped")]
+    over = [r for r in runnable if (_peak_gb(r) or 0) > 16.0]
+    dominant = {}
+    for r in runnable:
+        if r["mesh"] == "single":
+            d = r["roofline"]["dominant"]
+            dominant[d] = dominant.get(d, 0) + 1
+    return {
+        "runnable": len(runnable),
+        "skipped": len(skipped),
+        "over_budget": [(r["arch"], r["shape"], r["mesh"]) for r in over],
+        "dominant_counts": dominant,
+    }
+
+
+def main():
+    recs = load_records()
+    print("## §Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(recs))
+    print("\n## Summary\n")
+    print(json.dumps(summarize(recs), indent=1))
+
+
+if __name__ == "__main__":
+    main()

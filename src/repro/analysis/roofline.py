@@ -1,0 +1,43 @@
+"""Three-term roofline model from dry-run artifacts (TPU v5e targets).
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW_PER_LINK
+
+cost_analysis() on a GSPMD-partitioned executable reports *per-device*
+flops/bytes (the partitioned module is what was compiled); collective bytes
+come from analysis/hlo_parse.py over the same compiled module, i.e. also
+per-device. MODEL_FLOPS uses the 6·N·D convention (N = params, D = tokens;
+N_active for MoE); decode steps use 2·N·D (forward only).
+"""
+from __future__ import annotations
+
+from repro.distributed.constants import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+__all__ = ["roofline_terms", "model_flops"]
+
+
+def model_flops(kind: str, n_params_active: int, tokens: int) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference-only steps."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_params_active * tokens
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS_BF16
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW_PER_LINK
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_lower_bound_s": bound,  # perfect-overlap execution model
+        "step_upper_bound_s": total,  # zero-overlap execution model
+    }

@@ -1,0 +1,39 @@
+"""TCIM core — the paper's contribution as composable JAX modules.
+
+Public API:
+    tcim_count / tcim_count_graph   end-to-end bitwise triangle counting
+    build_sbf / build_worklist      sparsity-aware compression + scheduling
+    simulate_lru                    data reuse/exchange behavioral model
+    tcim_latency_energy             MRAM latency/energy analytical model
+"""
+from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
+from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
+from repro.core.tcim import BACKENDS, TCResult, tcim_count, tcim_count_graph
+from repro.core.cachesim import CacheStats, simulate_lru
+from repro.core.energymodel import (
+    MramConstants,
+    PAPER_TABLE5,
+    tcim_latency_energy,
+)
+from repro.core import baselines
+
+__all__ = [
+    "bitpack_matrix",
+    "bitunpack_matrix",
+    "popcount_u32",
+    "SlicedBitmap",
+    "Worklist",
+    "build_sbf",
+    "build_worklist",
+    "sbf_stats",
+    "BACKENDS",
+    "TCResult",
+    "tcim_count",
+    "tcim_count_graph",
+    "CacheStats",
+    "simulate_lru",
+    "MramConstants",
+    "PAPER_TABLE5",
+    "tcim_latency_energy",
+    "baselines",
+]

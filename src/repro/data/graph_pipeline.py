@@ -1,0 +1,35 @@
+"""Graph dataset pipeline: generate -> orient -> compress -> schedule.
+
+Streams (graph_config, Graph, SBF, Worklist) tuples for the TC benchmarks;
+results are cached in-process since generation dominates for large graphs.
+"""
+from __future__ import annotations
+
+from repro.configs.tcim_graphs import GraphConfig
+from repro.core.sbf import build_sbf, build_worklist
+from repro.graphs import GRAPH_GENERATORS, build_graph
+
+__all__ = ["load_graph", "graph_batches"]
+
+_CACHE: dict = {}
+
+
+def load_graph(cfg: GraphConfig, slice_bits: int = 64, reorder: bool = True):
+    key = (cfg.name, cfg.n, cfg.m, slice_bits, reorder)
+    if key in _CACHE:
+        return _CACHE[key]
+    gen = GRAPH_GENERATORS[cfg.generator]
+    if cfg.generator == "grid_road":
+        edges = gen(cfg.n, seed=cfg.seed)
+    else:
+        edges = gen(cfg.n, cfg.m, seed=cfg.seed)
+    g = build_graph(edges, reorder=reorder)
+    sbf = build_sbf(g, slice_bits)
+    wl = build_worklist(g, sbf)
+    _CACHE[key] = (g, sbf, wl)
+    return _CACHE[key]
+
+
+def graph_batches(configs, scale: float = 1.0, slice_bits: int = 64):
+    for cfg in configs:
+        yield cfg, *load_graph(cfg.scaled(scale), slice_bits)

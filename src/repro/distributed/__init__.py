@@ -1,0 +1,4 @@
+"""Distribution layer: sharded TC, LM shardings, gradient compression."""
+from repro.distributed.tc import distributed_tc_count, shard_worklist
+
+__all__ = ["distributed_tc_count", "shard_worklist"]

@@ -1,0 +1,77 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Pods are pure data parallelism: gradients are averaged across pods once per
+step over links ~10x slower than ICI. int8 quantization with per-tensor
+scales + error feedback (Seide et al.; 1-bit Adam lineage) cuts that traffic
+4x vs f32 (2x vs bf16) with no measurable convergence change at these
+scales; the residual buffer makes the quantization error telescope instead
+of accumulate.
+
+``compressed_psum_mean``: shard_map-based mean over an axis where each
+participant transmits int8: quantize -> psum(int32) -> dequantize. Exactness
+property (tested): with error feedback, sum over steps of (decoded - true)
+stays bounded by one quantization step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean", "ef_update"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_update(grad: jax.Array, residual: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback step: quantize (grad + residual), carry the new error.
+
+    Returns (q, scale, new_residual).
+    """
+    target = grad.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    decoded = dequantize_int8(q, scale)
+    return q, scale, target - decoded
+
+
+def compressed_psum_mean(stacked_grads, mesh, axis: str):
+    """Mean over mesh axis ``axis`` with int8 on the wire.
+
+    ``stacked_grads``: pytree whose leaves have a leading dim equal to the
+    axis size — entry i is rank i's local gradient (the manual-DP layout of
+    the cross-pod reduce). Scheme: pmax the amax first (one scalar
+    collective), quantize everyone against the SHARED scale, psum in int32
+    (exact), dequantize. Returns the stacked tree with every entry holding
+    the identical mean (replicated per rank).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def local(g):
+        def one(leaf):
+            x = leaf[0].astype(jnp.float32)  # this rank's shard
+            amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            total = jax.lax.psum(q.astype(jnp.int32), axis)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+            return (total.astype(jnp.float32) * scale / n).astype(leaf.dtype)[None]
+
+        return jax.tree.map(one, g)
+
+    spec = jax.tree.map(
+        lambda leaf: P(axis, *([None] * (leaf.ndim - 1))), stacked_grads
+    )
+    return jax.shard_map(
+        local, mesh=mesh, in_specs=(spec,), out_specs=spec
+    )(stacked_grads)

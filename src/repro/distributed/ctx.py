@@ -1,0 +1,115 @@
+"""Activation-sharding scope: explicit GSPMD constraints inside model code.
+
+Model code calls ``constrain(x, 'dp', None, 'tp', None)`` with *logical* axis
+names; outside a scope this is a no-op (eager smoke tests, single device).
+The launcher/dry-run activates a scope built from (cfg, mesh) so the same
+model code lowers with production constraints:
+
+    with activation_scope(cfg, mesh):
+        step.lower(*args)        # or step(*args) on a live mesh
+
+Logical axes:
+    'dp'  -> the batch axes (('pod','data') — plus 'model' for the pure-DP
+             profile used by small/indivisible-head archs)
+    'tp'  -> 'model' (None under the 'dp' profile)
+
+Divisibility is checked per call: a constraint that does not divide the dim
+degrades to None (replicated) instead of failing — e.g. batch=1 decode.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.constants import MODEL_AXIS_SIZE
+
+__all__ = ["activation_scope", "constrain", "arch_profile", "current_rules"]
+
+_STACK: list[tuple[Mesh, dict]] = []
+
+
+def arch_profile(cfg) -> str:
+    """'tp' when the head (or SSM-head) count shards over the model axis,
+    else 'dp' (small archs: replicate params over 'model', spread batch).
+    Configs may pin the profile (e.g. minicpm3: 40 heads don't divide 16 but
+    all its MLA latent projections do — TP works with per-head compute
+    replicated only inside the attention core)."""
+    if getattr(cfg, "parallelism", "auto") in ("tp", "dp"):
+        return cfg.parallelism
+    if cfg.family == "ssm":
+        return "tp" if cfg.ssm_heads % MODEL_AXIS_SIZE == 0 else "dp"
+    if cfg.family == "hybrid":
+        ok = (
+            cfg.ssm_heads % MODEL_AXIS_SIZE == 0
+            and cfg.n_heads % MODEL_AXIS_SIZE == 0
+        )
+        return "tp" if ok else "dp"
+    return "tp" if cfg.n_heads % MODEL_AXIS_SIZE == 0 else "dp"
+
+
+def rules_for(cfg, mesh: Mesh) -> dict:
+    """Logical-axis rules. 'sp' = Megatron-style sequence parallelism: the
+    residual stream between layers is sharded over 'model' on the seq dim
+    (gathered at attention/MLP entry, scattered at exit). This is what keeps
+    the per-layer carry stack (the unavoidable backprop residuals) at
+    seq/16 per device — without it an 80-layer 4k-seq train step cannot fit
+    HBM at this batch size."""
+    prof = arch_profile(cfg)
+    has_pod = "pod" in mesh.axis_names
+    if prof == "tp":
+        dp = ("pod", "data") if has_pod else ("data",)
+        return {"dp": dp, "tp": "model", "sp": "model", "profile": "tp"}
+    dp = ("pod", "data", "model") if has_pod else ("data", "model")
+    return {"dp": dp, "tp": None, "sp": None, "profile": "dp"}
+
+
+@contextlib.contextmanager
+def activation_scope(cfg, mesh: Mesh):
+    _STACK.append((mesh, rules_for(cfg, mesh)))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(shape.get(a, 1) for a in axis)
+    return shape.get(axis, 1)
+
+
+def _shrink(mesh: Mesh, axis, dim: int):
+    """Largest prefix of the (tuple) axis that divides dim, else None."""
+    if axis is None:
+        return None
+    if not isinstance(axis, tuple):
+        return axis if dim % _axis_size(mesh, axis) == 0 else None
+    cur = tuple(axis)
+    while cur:
+        if dim % _axis_size(mesh, cur) == 0:
+            return cur
+        cur = cur[:-1]
+    return None
+
+
+def constrain(x: jax.Array, *logical_axes):
+    """with_sharding_constraint under the active scope; identity otherwise."""
+    if not _STACK:
+        return x
+    mesh, rules = _STACK[-1]
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    entries = []
+    for dim, name in zip(x.shape, logical_axes, strict=True):
+        axis = rules.get(name) if name else None
+        entries.append(_shrink(mesh, axis, dim))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def current_rules():
+    return _STACK[-1][1] if _STACK else None

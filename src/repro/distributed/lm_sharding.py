@@ -1,0 +1,177 @@
+"""Sharding rules for the LM stack on the production mesh.
+
+Layout summary (mesh (pod, data, model); single-pod drops 'pod'):
+
+  params/optimizer  ZeRO-3: one non-TP dim over 'data', TP dims over 'model'
+                    (from the schema in models/*.py); replicated across pods
+                    (pods are pure DP; gradient all-reduce crosses pods once
+                    per step over DCN — the classic multi-slice layout).
+  batch             batch dim over ('pod','data') when divisible, else
+                    replicated (e.g. long_500k's batch=1).
+  KV caches         *sequence* dim over 'model' (flash-decoding layout: the
+                    per-step softmax combine is a tiny collective, vs.
+                    all-gathering KV or replicating the cache), batch over dp.
+  SSM states        heads over 'model', batch over dp.
+  logits            vocab over 'model' when divisible (loss computes against
+                    sharded logits; GSPMD inserts the logsumexp reductions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.ctx import _shrink, arch_profile, rules_for
+from repro.models.config import ModelConfig
+from repro.models.model import model_param_specs
+from repro.models.params import param_specs as schema_param_specs
+
+__all__ = [
+    "dp_axes",
+    "dp_size",
+    "batch_spec_tree",
+    "cache_spec_tree",
+    "train_state_specs",
+    "logits_spec",
+    "named_tree",
+]
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    names = dp_axes(mesh)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for n in names:
+        out *= shape[n]
+    return out
+
+
+def _tp_size(mesh: Mesh) -> int:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return shape.get("model", 1)
+
+
+def _b(mesh: Mesh, batch: int):
+    """Batch-dim spec entry: dp axes if divisible, else replicated."""
+    return dp_axes(mesh) if batch % dp_size(mesh) == 0 else None
+
+
+def batch_spec_tree(cfg: ModelConfig, mesh: Mesh, batch: dict) -> dict:
+    """PartitionSpecs for a train/prefill batch dict (keyed like the batch).
+
+    'dp'-profile archs (heads not divisible by the model axis) spread the
+    batch over the model axis too when it divides — pure data parallelism.
+    """
+    rules = rules_for(cfg, mesh)
+    out = {}
+    for k, v in batch.items():
+        bdim = _shrink(mesh, rules["dp"], v.shape[0])
+        out[k] = P(bdim, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_spec_tree(cfg: ModelConfig, mesh: Mesh, cache) -> dict:
+    """Specs mirroring init_cache's structure. Seq over 'model', batch dp."""
+    tp = _tp_size(mesh)
+
+    def spec_for(path_keys: tuple[str, ...], x) -> P:
+        key = path_keys[-1]
+        if key in ("k", "v"):  # [L, B, S, K, hd] or vlm [G, sp, B, S, K, hd]
+            lead = x.ndim - 4  # stacked layer/group dims before [B, S, K, hd]
+            b, s = x.shape[lead], x.shape[lead + 1]
+            return P(
+                *([None] * lead),
+                _b(mesh, b),
+                "model" if s % tp == 0 else None,
+                None,
+                None,
+            )
+        if key in ("shared_k", "shared_v"):  # [A, B, S, K, hd]
+            b, s = x.shape[1], x.shape[2]
+            return P(None, _b(mesh, b), "model" if s % tp == 0 else None, None, None)
+        if key in ("xk", "xv"):  # [G, B, n_img, K, hd]
+            return P(None, _b(mesh, x.shape[1]), None, None, None)
+        if key in ("ckv", "krope"):  # [L, B, S, r]
+            b, s = x.shape[1], x.shape[2]
+            return P(None, _b(mesh, b), "model" if s % tp == 0 else None, None)
+        if key in ("conv_x", "conv_b", "conv_c"):  # [L, B, w-1, C]
+            c = x.shape[-1]
+            return P(None, _b(mesh, x.shape[1]), None, "model" if c % tp == 0 else None)
+        if key == "ssm":  # [L, B, H, N, Pd]
+            h = x.shape[2]
+            return P(
+                None, _b(mesh, x.shape[1]), "model" if h % tp == 0 else None, None, None
+            )
+        raise KeyError(f"unknown cache leaf {path_keys}")
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for(tuple(k.key for k in path), x), cache
+    )
+
+
+def _first_divisible_dim_spec(shape: tuple, size: int) -> P:
+    """Shard the first dim divisible by ``size`` over 'data' (ZeRO-1)."""
+    entries = [None] * len(shape)
+    for i, d in enumerate(shape):
+        if d % size == 0 and d > 0:
+            entries[i] = "data"
+            break
+    return P(*entries)
+
+
+def train_state_specs(cfg: ModelConfig):
+    """(param_specs, opt_specs, grad_specs).
+
+    tp profile: ZeRO-3 — params/moments/grads all shard ('data' x 'model').
+    dp profile: params fully REPLICATED (pure data parallelism: no layout
+    conflicts anywhere in fwd/bwd), optimizer moments and the gradient
+    accumulator ZeRO-1-sharded over 'data' (the per-step param all-gather is
+    the classic ZeRO-1 trade).
+    """
+    from repro.distributed.constants import DATA_AXIS_SIZE
+    from repro.models.model import model_schema
+    from repro.models.params import ParamDef
+
+    schema = model_schema(cfg)
+    if arch_profile(cfg) == "tp":
+        if getattr(cfg, "zero3", True):
+            pspecs = model_param_specs(cfg)
+            opt = {"m": pspecs, "v": pspecs, "step": P()}
+            return pspecs, opt, pspecs
+        # TP/EP-only storage: params replicated over 'data' (no per-layer
+        # weight gathers); moments/grads keep the ZeRO sharding over 'data'.
+        pspecs = schema_param_specs(
+            schema, {"fsdp": None, "tp": "model", "vocab": "model", None: None}
+        )
+        zspecs = model_param_specs(cfg)  # fsdp->data on the storage dim
+        opt = {"m": zspecs, "v": zspecs, "step": P()}
+        return pspecs, opt, zspecs
+    pspecs = jax.tree.map(
+        lambda d: P(*([None] * len(d.shape))),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+    zero1 = jax.tree.map(
+        lambda d: _first_divisible_dim_spec(d.shape, DATA_AXIS_SIZE),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+    opt = {"m": zero1, "v": zero1, "step": P()}
+    return pspecs, opt, zero1
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    tp = _tp_size(mesh)
+    return P(_b(mesh, batch), None, "model" if cfg.vocab % tp == 0 else None)
+
+
+def named_tree(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

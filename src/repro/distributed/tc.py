@@ -1,0 +1,119 @@
+"""Distributed TCIM: shard the work list across the mesh, psum one scalar.
+
+TCIM's reduction is a commutative monoid (integer +), so the parallelization
+is embarrassing at slice-pair granularity: every device owns a contiguous
+stripe of the work list, gathers its slice words, runs the AND+BitCount
+kernel locally, and a single scalar ``psum`` closes the computation. This is
+also why the engine is elastic- and straggler-friendly (runtime/elastic.py):
+work stripes can be re-dealt to any surviving device set without touching
+the slice data.
+
+Slice data placement:
+  * ``replicated``  (default) — row/col slice stores live on every device;
+    right for graphs up to a few GB of SBF (all SNAP-class graphs: Table III
+    tops out at 16.8 MB) and removes all communication except the final psum.
+  * ``sharded_cols`` — column store sharded over the mesh axis, row stripe
+    all-gathered per step; for graphs whose SBF exceeds one device's HBM.
+    (Lowered and dry-run at 512 devices; see launch/dryrun.py --arch tcim.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sbf import SlicedBitmap, Worklist
+
+__all__ = ["shard_worklist", "distributed_tc_count", "make_tc_step"]
+
+
+def shard_worklist(wl: Worklist, num_shards: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad the pair index arrays to a multiple of num_shards and stack.
+
+    Padding points at record 0 on both sides with a sentinel weight of zero —
+    implemented by masking in the step function, so padded lanes are exact
+    no-ops regardless of what record 0 holds.
+    Returns (row_pos [S, ppd], col_pos [S, ppd]) int32 plus an implicit mask
+    encoded as negative indices.
+    """
+    p = wl.num_pairs
+    per = -(-max(p, 1) // num_shards)
+    total = per * num_shards
+    row = np.full(total, -1, dtype=np.int32)
+    col = np.full(total, -1, dtype=np.int32)
+    row[:p] = wl.pair_row_pos.astype(np.int32)
+    col[:p] = wl.pair_col_pos.astype(np.int32)
+    return row.reshape(num_shards, per), col.reshape(num_shards, per)
+
+
+def _local_count(row_data, col_data, row_idx, col_idx):
+    """Per-device partial count (pure jnp; portable inside shard_map)."""
+    mask = row_idx >= 0
+    safe_r = jnp.maximum(row_idx, 0)
+    safe_c = jnp.maximum(col_idx, 0)
+    rows = jnp.take(row_data, safe_r, axis=0)
+    cols = jnp.take(col_data, safe_c, axis=0)
+    pc = jax.lax.population_count(jnp.bitwise_and(rows, cols))
+    per_pair = pc.astype(jnp.int32).sum(axis=-1)
+    return jnp.where(mask, per_pair, 0).sum()
+
+
+def make_tc_step(mesh: Mesh, axis_names: tuple[str, ...]):
+    """Build the pjit'd distributed TC step for a mesh.
+
+    Data layout: slice stores replicated; work-list stripes sharded over all
+    mesh axes (flattened). Returns a function
+    ``step(row_data, col_data, row_idx, col_idx) -> total (replicated)``.
+    """
+    flat = P(axis_names)  # leading dim sharded over every axis
+
+    def step(row_data, col_data, row_idx, col_idx):
+        def local(row_data, col_data, r, c):
+            # r, c: this device's stripe of the flat work list.
+            partial = _local_count(row_data, col_data, r, c)
+            return jax.lax.psum(partial[None], axis_names)
+
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(), flat, flat),
+            out_specs=P(),
+        )(row_data, col_data, row_idx, col_idx)[0]
+
+    return jax.jit(
+        step,
+        in_shardings=(
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, flat),
+            NamedSharding(mesh, flat),
+        ),
+        out_shardings=NamedSharding(mesh, P()),
+    )
+
+
+def distributed_tc_count(
+    sbf: SlicedBitmap,
+    wl: Worklist,
+    mesh: Mesh,
+) -> int:
+    """Execute the distributed count on an actual mesh (test/production path)."""
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    row_idx, col_idx = shard_worklist(wl, n_dev)
+    step = make_tc_step(mesh, axis_names)
+    total = step(
+        jnp.asarray(sbf.row_slice_data),
+        jnp.asarray(sbf.col_slice_data),
+        jnp.asarray(row_idx.reshape(-1)),
+        jnp.asarray(col_idx.reshape(-1)),
+    )
+    return int(total)
+
+
+@functools.lru_cache(maxsize=8)
+def _pair_spec(axis_names: tuple[str, ...]) -> P:
+    return P(axis_names)

@@ -1,0 +1,37 @@
+"""Graph substrate: generators, CSR structures, orientations, exact references.
+
+Everything here is plain numpy (host-side preprocessing); the compute path that
+consumes these structures lives in ``repro.core`` / ``repro.kernels``.
+"""
+from repro.graphs.generators import (
+    erdos_renyi,
+    rmat,
+    barabasi_albert,
+    grid_road,
+    complete_graph,
+    triangle_free_bipartite,
+    GRAPH_GENERATORS,
+)
+from repro.graphs.csr import Graph, build_graph, degree_order, upper_triangular_edges
+from repro.graphs.exact import (
+    triangles_dense_trace,
+    triangles_intersection,
+    triangles_bruteforce,
+)
+
+__all__ = [
+    "erdos_renyi",
+    "rmat",
+    "barabasi_albert",
+    "grid_road",
+    "complete_graph",
+    "triangle_free_bipartite",
+    "GRAPH_GENERATORS",
+    "Graph",
+    "build_graph",
+    "degree_order",
+    "upper_triangular_edges",
+    "triangles_dense_trace",
+    "triangles_intersection",
+    "triangles_bruteforce",
+]

@@ -1,0 +1,107 @@
+"""Flash attention (online softmax) Pallas kernel for TPU.
+
+Beyond-paper optimization for the LM substrate: the dominant memory-roofline
+term of every train/prefill cell is attention-score traffic — [B,H,S,S]
+materializes in HBM three-plus times per layer. This kernel keeps the whole
+online-softmax state in VMEM: HBM traffic collapses to Q+K+V+O.
+
+Grid: (batch*heads, Sq/block_q); each step scans KV blocks with
+running (max, sum, acc) state — the standard TPU flash pattern with
+BlockSpec-tiled VMEM operands. Causal masking by absolute positions, so the
+same kernel serves full training, chunk-parallel prefill and (degenerate
+Sq=1) decode.
+
+Validated in interpret mode against ref.ref_attention (tests/test_kernels
+_flash.py); used at runtime via ModelConfig.attention_impl='flash' on TPU.
+The dry-run roofline's "kernel-adjusted" memory term (EXPERIMENTS.md §Perf)
+uses this kernel's analytic IO in place of the unfused attention bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas", "flash_io_bytes"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref, *, block_k, causal, scale):
+    """One (batch-head, q-block) step: scan KV blocks with online softmax."""
+    q = q_ref[0]  # [block_q, hd]
+    block_q, hd = q.shape
+    n_k = k_ref.shape[1] // block_k
+
+    def body(i, state):
+        m, l, acc = state
+        k = pl.load(k_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [block_q, block_k]
+        if causal:
+            qp = qpos_ref[0]  # [block_q]
+            kp = pl.load(kpos_ref, (0, pl.ds(i * block_k, block_k)))
+            s = jnp.where(qp[:, None] >= kp[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [BH, Sq, hd]
+    k: jax.Array,  # [BH, Sk, hd]
+    v: jax.Array,  # [BH, Sk, hd]
+    q_pos: jax.Array,  # [BH, Sq] int32 absolute positions
+    k_pos: jax.Array,  # [BH, Sk] int32
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (bh, sq // block_q)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, sk, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sk, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((1, sk), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, q_pos, k_pos)
+
+
+def flash_io_bytes(b, h, sq, sk, hd, vd=None, dtype_bytes=2, train=True) -> int:
+    """Analytic HBM traffic of the fused kernel: Q+K+V read, O written;
+    x3 for training (fwd + bwd reading QKV/O + dO, writing dQKV)."""
+    vd = hd if vd is None else vd
+    fwd = b * h * (sq * hd + sk * hd + sk * vd + sq * vd) * dtype_bytes
+    return int(fwd * (3 if train else 1))

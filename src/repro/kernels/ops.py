@@ -1,0 +1,137 @@
+"""Public jit'd wrappers for the TCIM kernels.
+
+Handle padding/layout so callers never think about block alignment, and pick
+``interpret=True`` automatically on the CPU backend (the validation mode for
+this container; on real TPUs the same calls compile to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import on_cpu
+from repro.kernels.slice_and_popcount import items_pallas, total_pallas
+from repro.kernels.tc_bitgemm import bitgemm_pallas
+from repro.kernels.tc_dense_mxu import dense_mxu_tc_pallas
+
+__all__ = ["popcount_and_items", "popcount_and_total", "bitgemm", "dense_mxu_tc"]
+
+
+def _interpret(flag: bool | None) -> bool:
+    return on_cpu() if flag is None else flag
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    p = a.shape[0]
+    rem = (-p) % multiple
+    if rem:
+        a = jnp.pad(a, ((0, rem),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+def popcount_and_items(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-pair popcount(rows & cols): [P, W] x [P, W] uint32 -> [P] int32.
+
+    Also reused as a generic primitive (e.g. MoE routing-mask overlap stats).
+    """
+    p = rows.shape[0]
+    if p == 0:
+        return jnp.zeros((0,), jnp.int32)
+    block_p = min(block_p, max(8, 1 << int(np.ceil(np.log2(p)))))
+    rows = _pad_rows(rows, block_p)
+    cols = _pad_rows(cols, block_p)
+    out = items_pallas(rows, cols, block_p=block_p, interpret=_interpret(interpret))
+    return out[:p]
+
+
+def popcount_and_total(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    block_rows: int = 256,
+    lanes: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused scalar total of popcount(rows & cols) over all pairs.
+
+    Flattens [P, W] word streams into zero-padded (T, lanes) blocks — zero
+    words contribute nothing, so padding is free — then runs the fused
+    reduction kernel (one HBM pass, no per-item materialization).
+    """
+    assert rows.shape == cols.shape, (rows.shape, cols.shape)
+    total_words = int(np.prod(rows.shape))
+    if total_words == 0:
+        return jnp.int64(0)
+    r = rows.reshape(-1)
+    c = cols.reshape(-1)
+    tile = block_rows * lanes
+    rem = (-total_words) % tile
+    if rem:
+        r = jnp.pad(r, (0, rem))
+        c = jnp.pad(c, (0, rem))
+    r = r.reshape(-1, lanes)
+    c = c.reshape(-1, lanes)
+    return total_pallas(
+        r, c, block_rows=block_rows, lanes=lanes, interpret=_interpret(interpret)
+    )
+
+
+def bitgemm(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_w: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Popcount-GEMM: [I, W] x [J, W] uint32 -> [I, J] int32."""
+    i_dim, w = x.shape
+    j_dim = y.shape[0]
+    block_i = min(block_i, i_dim) if i_dim else block_i
+    block_j = min(block_j, j_dim) if j_dim else block_j
+    block_w = min(block_w, w) if w else block_w
+    xp = _pad_rows(x, block_i)
+    yp = _pad_rows(y, block_j)
+    rem_w = (-w) % block_w
+    if rem_w:
+        xp = jnp.pad(xp, ((0, 0), (0, rem_w)))
+        yp = jnp.pad(yp, ((0, 0), (0, rem_w)))
+    out = bitgemm_pallas(
+        xp,
+        yp,
+        block_i=block_i,
+        block_j=block_j,
+        block_w=block_w,
+        interpret=_interpret(interpret),
+    )
+    return out[:i_dim, :j_dim]
+
+
+def dense_mxu_tc(
+    a: jax.Array,
+    *,
+    block: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Masked A @ A triangle count on the MXU. a: [N, N] {0,1} (any int/bool dtype)."""
+    n = a.shape[0]
+    block = min(block, n)
+    rem = (-n) % block
+    ab = a.astype(jnp.bfloat16)
+    if rem:
+        ab = jnp.pad(ab, ((0, rem), (0, rem)))
+    return dense_mxu_tc_pallas(
+        ab,
+        block_i=block,
+        block_j=block,
+        block_k=block,
+        interpret=_interpret(interpret),
+    )

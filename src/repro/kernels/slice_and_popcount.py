@@ -1,0 +1,114 @@
+"""Paper-faithful TCIM compute kernel: AND + BitCount over valid slice pairs.
+
+This is the TPU adaptation of the MRAM computational array (paper §IV-C):
+where TCIM activates two word lines and senses the AND against R_ref-AND, we
+stream gathered slice-pair words through VMEM and do the AND + SWAR popcount
+on the VPU. Two variants:
+
+  * ``items_kernel``  — per-pair counts [P]; debuggable/testable form.
+  * ``total_kernel``  — fused full reduction to a single scalar, operating on
+    the flattened word stream with (8, LANES)-aligned blocks. This is the
+    performance path: one pass over the gathered words, no [P] materialize.
+
+Both consume *gathered* operands (XLA gathers the slice words by work-list
+index before the call) — the gather is the HBM-bandwidth term the roofline
+analysis tracks, the kernel itself is the in-VMEM compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import swar_popcount_u32
+
+__all__ = ["items_pallas", "total_pallas"]
+
+
+def _items_kernel(rows_ref, cols_ref, out_ref):
+    """Block: rows (BP, W), cols (BP, W) uint32 -> out (BP, 1) int32."""
+    x = rows_ref[...] & cols_ref[...]
+    out_ref[...] = swar_popcount_u32(x).sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def items_pallas(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    block_p: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """popcount(rows & cols) summed per item. rows/cols: [P, W] uint32 -> [P] int32.
+
+    P must be a multiple of block_p (ops.py pads); W is words_per_slice.
+    """
+    p, w = rows.shape
+    assert cols.shape == (p, w), (rows.shape, cols.shape)
+    assert p % block_p == 0, (p, block_p)
+    grid = (p // block_p,)
+    out = pl.pallas_call(
+        _items_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        interpret=interpret,
+    )(rows, cols)
+    return out[:, 0]
+
+
+def _total_kernel(rows_ref, cols_ref, out_ref):
+    """Block: (BS, LANES) words; accumulates a scalar across the grid.
+
+    TPU grid steps run sequentially on a core, so accumulating into the same
+    (1, 1) output block is the canonical fused-reduction pattern.
+    """
+    i = pl.program_id(0)
+    x = rows_ref[...] & cols_ref[...]
+    partial = swar_popcount_u32(x).sum()
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "lanes", "interpret"))
+def total_pallas(
+    rows_flat: jax.Array,
+    cols_flat: jax.Array,
+    *,
+    block_rows: int = 256,
+    lanes: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused total popcount(rows & cols). Inputs: [T, lanes] uint32 -> scalar int64.
+
+    The caller flattens the [P, W] gathered words into a (T, lanes) matrix
+    padded with zeros (zero words contribute nothing to the count).
+    """
+    t, l = rows_flat.shape
+    assert l == lanes and t % block_rows == 0, (rows_flat.shape, block_rows, lanes)
+    grid = (t // block_rows,)
+    out = pl.pallas_call(
+        _total_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(rows_flat, cols_flat)
+    # int32 per call; callers chunk the stream and accumulate in host int64.
+    return out[0, 0]

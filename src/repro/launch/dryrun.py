@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry run (the two lines above MUST precede any jax import: jax
+# locks the device count at first init).
+#
+# For every (architecture x input shape) cell, build the production-sharded
+# step function, .lower().compile() it on the 16x16 (single-pod) and 2x16x16
+# (multi-pod) placeholder meshes, and record:
+#   * compiled.memory_analysis()  -> bytes per device (proves it fits)
+#   * compiled.cost_analysis()    -> per-device FLOPs / HBM bytes
+#   * parsed collective bytes     -> analysis/hlo_parse.py
+# Results are cached as JSON under results/dryrun/ (incremental reruns).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+#   python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+#   python -m repro.launch.dryrun --tcim          # distributed TC engine cell
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.analysis.hlo_cost import hlo_cost
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.shapes import cell_status
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import CellSpec
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "serialized_size_in_bytes",
+    ):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    # Peak live = args + temps (aliased/donated buffers already excluded
+    # from temp by XLA's accounting).
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_bytes_estimate"] = (
+            out["argument_size_in_bytes"]
+            + out["output_size_in_bytes"]
+            + out["temp_size_in_bytes"]
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, serialize_hlo: bool = False) -> dict:
+    """Lower+compile one cell; returns the result record."""
+    spec = CellSpec(arch, shape_name)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": spec.shape.kind,
+        "skipped": not spec.runs,
+        "skip_reason": spec.skip_reason,
+    }
+    if not spec.runs:
+        return record
+    cfg = spec.cfg
+    mesh = _mesh(mesh_kind)
+    n_chips = int(np.prod(mesh.devices.shape))
+    args = spec.args()
+
+    from repro.distributed.ctx import activation_scope
+
+    t0 = time.perf_counter()
+    if spec.shape.kind == "train":
+        # Production default: 8 microbatches (gradient accumulation bounds
+        # activation memory). dp-profile archs that already spread the batch
+        # over every device (global_batch % n_chips == 0) run single-shot —
+        # accumulation would only drop the per-device batch below 1.
+        from repro.distributed.ctx import arch_profile
+        from repro.distributed.lm_sharding import dp_size
+
+        gb = spec.shape.global_batch
+        if arch_profile(cfg) == "dp" and gb % n_chips == 0:
+            mb = 1  # batch already spread over every chip
+        else:
+            # One sequence per device per microbatch (ZeRO-grad accumulation).
+            mb = max(8, gb // dp_size(mesh))
+        step = make_train_step(cfg, mesh, args[2], microbatches=mb)
+    elif spec.shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh, args[1], args[2])
+    else:
+        step = make_serve_step(cfg, mesh, args[1], spec.shape.global_batch)
+    with activation_scope(cfg, mesh):
+        lowered = step.lower(*args)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    xla_cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    hc = hlo_cost(hlo_text, tags={"attn": "attn_core"})
+
+    tokens = spec.shape.global_batch * (
+        spec.shape.seq if spec.shape.kind != "decode" else 1
+    )
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    mf = model_flops(spec.shape.kind, n_active, tokens)
+
+    record.update(
+        {
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": _memory_analysis_dict(compiled),
+            # Trip-count-aware per-device terms (analysis/hlo_cost.py).
+            "flops_per_device": hc.flops,
+            "bytes_per_device": hc.bytes,
+            "collectives": {
+                "total_bytes": hc.collective_bytes,
+                "by_op": hc.collective_by_op,
+                "unknown_trip_whiles": hc.unknown_trip_whiles,
+                "custom_calls": hc.custom_calls,
+            },
+            "bytes_by_tag": hc.bytes_by_tag or {},
+            # XLA's loop-unaware numbers kept for reference.
+            "xla_cost_raw": {
+                "flops": float(xla_cost.get("flops", 0.0)),
+                "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+            },
+            "params_total": n_total,
+            "params_active": n_active,
+            "tokens_per_step": tokens,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_chips,
+            "hlo_lines": hlo_text.count("\n"),
+        }
+    )
+    record["roofline"] = roofline_terms(hc.flops, hc.bytes, hc.collective_bytes)
+    if hc.flops > 0:
+        record["useful_flops_ratio"] = (mf / n_chips) / hc.flops
+    if serialize_hlo:
+        hdir = RESULTS_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch}__{shape_name}__{mesh_kind}.txt").write_text(hlo_text)
+    return record
+
+
+def run_tcim(mesh_kind: str) -> dict:
+    """Dry-run the distributed TC engine at com-lj scale on the full mesh."""
+    from repro.distributed.tc import make_tc_step
+
+    mesh = _mesh(mesh_kind)
+    n_chips = int(np.prod(mesh.devices.shape))
+    # com-LiveJournal scale: ~34.7M edges; SBF ~16.8 MB -> ~1.4M valid
+    # slices; work list ~40M pairs, padded to the device count.
+    nvs = 1 << 21
+    pairs = 1 << 26
+    wps = 2  # 64-bit slices
+    import jax.numpy as jnp
+
+    args = (
+        jax.ShapeDtypeStruct((nvs, wps), jnp.uint32),
+        jax.ShapeDtypeStruct((nvs, wps), jnp.uint32),
+        jax.ShapeDtypeStruct((pairs,), jnp.int32),
+        jax.ShapeDtypeStruct((pairs,), jnp.int32),
+    )
+    step = make_tc_step(mesh, tuple(mesh.axis_names))
+    t0 = time.perf_counter()
+    lowered = step.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    hlo_text = compiled.as_text()
+    hc = hlo_cost(hlo_text)
+    return {
+        "arch": "tcim-distributed",
+        "shape": f"comlj_{pairs}pairs",
+        "mesh": mesh_kind,
+        "kind": "tc",
+        "skipped": False,
+        "skip_reason": "",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _memory_analysis_dict(compiled),
+        "flops_per_device": hc.flops,
+        "bytes_per_device": hc.bytes,
+        "collectives": {
+            "total_bytes": hc.collective_bytes,
+            "by_op": hc.collective_by_op,
+        },
+        "roofline": roofline_terms(hc.flops, hc.bytes, hc.collective_bytes),
+    }
+
+
+def _result_path(arch: str, shape: str, mesh_kind: str) -> Path:
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh_kind}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCHS) + ["tcim"], default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tcim", action="store_true")
+    ap.add_argument("--serialize-hlo", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells: list[tuple[str, str]] = []
+    if args.tcim or args.arch == "tcim":
+        cells = [("tcim", "tc")]
+    elif args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    else:
+        ap.error("need --all, --tcim, or both --arch and --shape")
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            path = _result_path(arch, shape, mk)
+            if path.exists() and not args.force:
+                rec = json.loads(path.read_text())
+                status = "skip" if rec.get("skipped") else "cached"
+                print(f"[{status}] {arch} x {shape} x {mk}")
+                continue
+            try:
+                if arch == "tcim":
+                    rec = run_tcim(mk)
+                    path = _result_path("tcim-distributed", "comlj", mk)
+                else:
+                    rec = run_cell(arch, shape, mk, args.serialize_hlo)
+            except Exception:
+                failures += 1
+                err = traceback.format_exc()
+                print(f"[FAIL] {arch} x {shape} x {mk}\n{err}")
+                path.write_text(
+                    json.dumps(
+                        {"arch": arch, "shape": shape, "mesh": mk,
+                         "skipped": False, "error": err.splitlines()[-1]},
+                        indent=1,
+                    )
+                )
+                continue
+            path.write_text(json.dumps(rec, indent=1))
+            if rec.get("skipped"):
+                print(f"[skip] {arch} x {shape} x {mk}: {rec['skip_reason']}")
+            else:
+                r = rec.get("roofline", {})
+                print(
+                    f"[ok]   {arch} x {shape} x {mk} "
+                    f"compile={rec['compile_s']}s "
+                    f"flops/dev={rec['flops_per_device']:.3e} "
+                    f"bytes/dev={rec['bytes_per_device']:.3e} "
+                    f"coll={rec['collectives']['total_bytes']:.3e}B "
+                    f"dominant={r.get('dominant')}"
+                )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

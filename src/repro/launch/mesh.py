@@ -1,0 +1,26 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state; jax.make_mesh runs only when called).
+
+Single pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+The 'pod' axis is pure data parallelism across slices (gradient all-reduce
+over DCN once per step); 'data' is ZeRO/FSDP + batch; 'model' is TP/EP/
+sequence-parallel KV. See distributed/lm_sharding.py for the full layout.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

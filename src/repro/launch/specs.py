@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — no allocation.
+
+``input_specs(arch, shape_name)`` returns everything the lowered step takes:
+    train:   (params, opt_state, batch)
+    prefill: (params, cache, batch)
+    decode:  (params, cache, token, pos)
+
+Shapes come from configs/shapes.py; parameter/optimizer/cache trees come from
+jax.eval_shape over the real init functions, so the dry run lowers exactly
+what the production step would see.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.shapes import Shape, cell_status
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache, init_model
+from repro.optim import adamw_init
+
+__all__ = ["input_specs", "batch_struct", "CellSpec"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: Shape, with_labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, s, cfg.d_frontend), jnp.bfloat16)
+        if with_labels:
+            batch["labels"] = _sds((b, s), jnp.int32)
+            batch["mask"] = _sds((b, s), jnp.bool_)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        if with_labels:
+            batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = _sds(
+            (b, cfg.n_image_tokens, cfg.d_frontend), jnp.bfloat16
+        )
+    return batch
+
+
+class CellSpec:
+    """Everything needed to lower one (arch, shape) cell."""
+
+    def __init__(self, arch: str, shape_name: str):
+        self.arch = arch
+        self.shape = SHAPES[shape_name]
+        self.cfg = get_config(arch)
+        self.runs, self.skip_reason = cell_status(self.cfg.family, shape_name)
+
+    def params_struct(self):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)  # PRNG key placeholder
+        return jax.eval_shape(
+            lambda k: init_model(k, self.cfg), jax.random.PRNGKey(0)
+        )
+
+    def opt_struct(self):
+        return jax.eval_shape(adamw_init, self.params_struct())
+
+    def cache_struct(self):
+        return jax.eval_shape(
+            lambda: init_cache(self.cfg, self.shape.global_batch, self.shape.seq)
+        )
+
+    def args(self):
+        """Positional ShapeDtypeStruct args for the step function."""
+        kind = self.shape.kind
+        if kind == "train":
+            return (
+                self.params_struct(),
+                self.opt_struct(),
+                batch_struct(self.cfg, self.shape, with_labels=True),
+            )
+        if kind == "prefill":
+            return (
+                self.params_struct(),
+                self.cache_struct(),
+                batch_struct(self.cfg, self.shape, with_labels=False),
+            )
+        # decode: one new token against a seq-long cache
+        return (
+            self.params_struct(),
+            self.cache_struct(),
+            _sds((self.shape.global_batch, 1), jnp.int32),
+            _sds((), jnp.int32),
+        )
+
+
+def input_specs(arch: str, shape_name: str):
+    return CellSpec(arch, shape_name).args()

@@ -1,0 +1,417 @@
+"""Transformer primitives: RMSNorm, RoPE, GQA/MLA attention, SwiGLU.
+
+All functions are pure; parameters arrive as dicts produced from the schemas
+declared alongside each block (see models/params.py). Attention supports:
+
+  * GQA with optional QKV bias (qwen-style), causal or bidirectional
+  * chunked query processing with full-row softmax per chunk — the
+    memory-efficient path for 32k+ prefill (peak scores = [*, chunk, S])
+  * decode with an externally managed KV cache (positions passed in)
+  * MLA (latent KV) in direct form for train/prefill and *absorbed* form for
+    decode (scores in latent space; no per-step KV decompression)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+__all__ = [
+    "rmsnorm",
+    "rope",
+    "attn_schema",
+    "attn_forward",
+    "attn_decode",
+    "mla_schema",
+    "mla_forward",
+    "mla_decode",
+    "mlp_schema",
+    "mlp_forward",
+    "norm_schema",
+]
+
+# ---------------------------------------------------------------- primitives
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_schema(dim: int) -> ParamDef:
+    return ParamDef((dim,), "ones", (None,))
+
+
+def _rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------- scaled dot attn
+
+
+def _sdpa(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Sk, K, hd]
+    v: jax.Array,  # [B, Sk, K, vd]
+    q_pos: jax.Array,  # [B, Sq]
+    k_pos: jax.Array,  # [B, Sk]
+    causal: bool,
+    scale: float,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    rep = h // kheads
+    if rep != 1:
+        # Materialize repeated KV so the scores einsum has a plain head dim:
+        # with H % model_axis == 0 GSPMD shards scores on H with no
+        # collectives inside attention (the repeat itself is sharded too).
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    scores = constrain(scores, "dp", "tp", None, None)
+    if causal:
+        mask = q_pos[:, None, :, None] >= k_pos[:, None, None, :]  # [B,1,Sq,Sk]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshv->bqhv", w, v)
+    return constrain(out.reshape(b, sq, h, v.shape[-1]), "dp", None, "tp", None)
+
+
+def _sdpa_chunked(
+    q, k, v, q_pos, k_pos, causal: bool, scale: float, chunk: int
+) -> jax.Array:
+    """Scan over query chunks — peak score memory [B, K, rep, chunk, Sk]."""
+    b, sq, h, hd = q.shape
+    n_chunks = sq // chunk
+    assert sq % chunk == 0, (sq, chunk)
+    qs = q.reshape(b, n_chunks, chunk, h, hd)
+    ps = q_pos.reshape(b, n_chunks, chunk)
+
+    def body(_, inp):
+        qc, pc = inp  # [B, chunk, H, hd], [B, chunk]
+        return None, _sdpa(qc, k, v, pc, k_pos, causal, scale)
+
+    _, out = jax.lax.scan(
+        body, None, (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(ps, 1, 0))
+    )
+    # out: [n_chunks, B, chunk, H, vd]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, v.shape[-1])
+    return out
+
+
+def attention_op(q, k, v, q_pos, k_pos, causal, chunk_threshold=8192, chunk=1024,
+                 impl="xla"):
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "flash":
+        out = _flash(q, k, v, q_pos, k_pos, causal)
+        if out is not None:
+            return out
+    with jax.named_scope("attn_core"):
+        if q.shape[1] > chunk_threshold and q.shape[1] % chunk == 0:
+            return _sdpa_chunked(q, k, v, q_pos, k_pos, causal, scale, chunk)
+        return _sdpa(q, k, v, q_pos, k_pos, causal, scale)
+
+
+def _flash(q, k, v, q_pos, k_pos, causal):
+    """Pallas flash-attention path; None when shapes don't tile (caller
+    falls back to the XLA path). Same-width heads only (GQA pre-repeated)."""
+    from repro.kernels.common import on_cpu
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    if kh != h or v.shape[-1] != hd:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(512, sq)
+    bk = min(512, sk)
+    if sq % bq or sk % bk:
+        return None
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, v.shape[-1])
+    qp = jnp.broadcast_to(q_pos[:, None, :], (b, h, sq)).reshape(b * h, sq)
+    kp = jnp.broadcast_to(k_pos[:, None, :], (b, h, sk)).reshape(b * h, sk)
+    out = flash_attention_pallas(
+        qf, kf, vf, qp, kp, causal=causal, block_q=bq, block_k=bk,
+        interpret=on_cpu(),
+    )
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+def cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``new`` [B, 1, ...] into ``cache`` [B, S, ...] at seq index pos.
+
+    Formulated as a broadcast-select rather than dynamic_update_slice: a
+    dynamic start index on the seq dim makes GSPMD unshard it (it cannot
+    prove the write is shard-local), which at 32k context replicates the
+    whole cache per layer. The select keeps the seq dim sharded; the cost is
+    a full local-shard rewrite per step — the §Perf decode hillclimb
+    replaces this with a shard_map-local DUS.
+    """
+    sel = jnp.arange(cache.shape[1], dtype=jnp.int32) == pos
+    sel = sel.reshape((1, -1) + (1,) * (cache.ndim - 2))
+    return jnp.where(sel, new.astype(cache.dtype), cache)
+
+
+# ------------------------------------------------------------------ GQA attn
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamDef((d, h * hd), "normal", ("fsdp", "tp")),
+        "wk": ParamDef((d, k * hd), "normal", ("fsdp", "tp")),
+        "wv": ParamDef((d, k * hd), "normal", ("fsdp", "tp")),
+        "wo": ParamDef((h * hd, d), "scaled", ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((h * hd,), "zeros", ("tp",))
+        s["bk"] = ParamDef((k * hd,), "zeros", ("tp",))
+        s["bv"] = ParamDef((k * hd,), "zeros", ("tp",))
+    if cross:
+        # Tanh-gated cross attention (llama-3.2-vision style).
+        s["gate"] = ParamDef((), "zeros", ())
+    return s
+
+
+def _project_qkv(p: dict, x: jax.Array, kv_x: jax.Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    sk = kv_x.shape[1]
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    kk = kv_x @ p["wk"]
+    vv = kv_x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        kk = kk + p["bk"]
+        vv = vv + p["bv"]
+    return (
+        q.reshape(b, s, h, hd),
+        kk.reshape(b, sk, k, hd),
+        vv.reshape(b, sk, k, hd),
+    )
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    kv_x: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    causal: bool | None = None,
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    ``kv_x`` switches to cross-attention (keys/values from another stream,
+    e.g. image patch embeddings); cross attention is never causal.
+    """
+    cross = kv_x is not None
+    # Megatron-SP: gather the seq-sharded residual stream once at the QKV
+    # projection input (norms upstream ran seq-sharded).
+    x = constrain(x, "dp", None, None)
+    kv_src = kv_x if cross else x
+    kv_pos = kv_positions if cross else positions
+    q, k, v = _project_qkv(p, x, kv_src, cfg)
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    is_causal = cfg.causal if causal is None else causal
+    if cross:
+        is_causal = False
+        kv_pos = jnp.zeros(kv_src.shape[:2], jnp.int32)
+    out = attention_op(
+        q, k, v, positions, kv_pos, is_causal,
+        chunk_threshold=cfg.long_context_threshold, chunk=cfg.attn_chunk,
+        impl=cfg.attention_impl,
+    )
+    out = out.reshape(*x.shape[:2], -1) @ p["wo"]
+    if cross:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return constrain(out, "dp", "sp", None), (k, v)
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,  # [B, 1, D]
+    pos: jax.Array,  # [] scalar current position
+    k_cache: jax.Array,  # [B, Smax, K, hd]  (seq dim sharded over 'model')
+    v_cache: jax.Array,
+    cfg: ModelConfig,
+):
+    """Single-token decode against a KV cache. Returns (out, new_k, new_v).
+
+    Flash-decoding layout: the cache's *sequence* dim is sharded over the
+    model axis; each shard scores its KV chunk and GSPMD inserts the tiny
+    softmax-combine collectives ([B,H] max/sum), instead of gathering or
+    replicating the cache.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # The new token's K/V come out of the TP projection sharded on hd; the
+    # cache is seq-sharded. Replicate the (tiny) new KV before the write so
+    # GSPMD never reshards the cache to reconcile the two layouts.
+    k = constrain(k, "dp", None, None, None)
+    v = constrain(v, "dp", None, None, None)
+    k_cache = cache_write(k_cache, k, pos)
+    v_cache = cache_write(v_cache, v, pos)
+    k_cache = constrain(k_cache, "dp", "tp", None, None)
+    v_cache = constrain(v_cache, "dp", "tp", None, None)
+    smax = k_cache.shape[1]
+    kheads = k_cache.shape[2]
+    rep = q.shape[2] // kheads
+    kk = k_cache.astype(q.dtype)
+    vv = v_cache.astype(q.dtype)
+    # Grouped-query einsum directly against the cache — repeating KV here
+    # would materialize rep x the cache per layer.
+    qg = q.reshape(b, 1, kheads, rep, q.shape[-1])
+    with jax.named_scope("attn_core"):
+        scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, kk).astype(jnp.float32)
+        scores = constrain(scores, "dp", None, None, None, "tp")
+        scores = scores / (q.shape[-1] ** 0.5)
+        valid = (jnp.arange(smax, dtype=jnp.int32) <= pos)[None, None, None, None, :]
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkrqs,bskv->bqkrv", w, vv)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+# ------------------------------------------------------------------ MLA attn
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wdq": ParamDef((d, qr), "normal", ("fsdp", None)),
+        "q_norm": norm_schema(qr),
+        "wuq": ParamDef((qr, h * (nope + rope_d)), "normal", (None, "tp")),
+        "wdkv": ParamDef((d, kvr + rope_d), "normal", ("fsdp", None)),
+        "kv_norm": norm_schema(kvr),
+        "wuk": ParamDef((kvr, h * nope), "normal", (None, "tp")),
+        "wuv": ParamDef((kvr, h * vd), "normal", (None, "tp")),
+        "wo": ParamDef((h * vd, d), "scaled", ("tp", "fsdp")),
+    }
+
+
+def _mla_qkv(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    """Returns q (nope+rope per head), latent ckv, shared roped k_rope."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ p["wdkv"]
+    ckv = rmsnorm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(dkv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    """Direct-form MLA for train/prefill. Returns (out, (ckv, k_rope))."""
+    b, s, _ = x.shape
+    h, nope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, positions, cfg)
+    k_nope = (ckv @ p["wuk"]).reshape(b, s, h, nope)
+    v = (ckv @ p["wuv"]).reshape(b, s, h, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    out = attention_op(
+        q, k, v, positions, positions, cfg.causal,
+        chunk_threshold=cfg.long_context_threshold, chunk=cfg.attn_chunk,
+        impl=cfg.attention_impl,
+    )
+    out = out.reshape(b, s, -1) @ p["wo"]
+    return constrain(out, "dp", "sp", None), (ckv, k_rope)
+
+
+def mla_decode(
+    p: dict,
+    x: jax.Array,  # [B, 1, D]
+    pos: jax.Array,
+    ckv_cache: jax.Array,  # [B, Smax, kv_rank]
+    krope_cache: jax.Array,  # [B, Smax, rope_d]
+    cfg: ModelConfig,
+):
+    """Absorbed-form MLA decode: scores in latent space, no decompression.
+
+    score = q_nope @ W_uk^T  ·  ckv_cached  +  q_rope · k_rope_cached
+    out   = (softmax @ ckv_cached) @ W_uv, per head.
+    """
+    b = x.shape[0]
+    h, nope, vd, kvr = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, positions, cfg)
+    ckv_cache = cache_write(ckv_cache, ckv, pos)
+    krope_cache = cache_write(krope_cache, k_rope, pos)
+    ckv_cache = constrain(ckv_cache, "dp", "tp", None)
+    krope_cache = constrain(krope_cache, "dp", "tp", None)
+    wuk = p["wuk"].reshape(kvr, h, nope)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk)  # absorb W_uk into q
+    scores = (
+        jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv_cache.astype(q_lat.dtype))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope_cache.astype(q_rope.dtype))
+    ).astype(jnp.float32)
+    scale = 1.0 / ((nope + cfg.qk_rope_dim) ** 0.5)
+    smax = ckv_cache.shape[1]
+    valid = jnp.arange(smax)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores * scale, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    lat_out = jnp.einsum("bhqs,bsk->bqhk", w, ckv_cache.astype(x.dtype))
+    wuv = p["wuv"].reshape(kvr, h, vd)
+    out = jnp.einsum("bqhk,khv->bqhv", lat_out, wuv)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, ckv_cache, krope_cache
+
+
+# -------------------------------------------------------------------- SwiGLU
+
+
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    return {
+        "wi_gate": ParamDef((d, f), "normal", ("fsdp", "tp")),
+        "wi_up": ParamDef((d, f), "normal", ("fsdp", "tp")),
+        "wo": ParamDef((f, d), "scaled", ("tp", "fsdp")),
+    }
+
+
+def mlp_forward(p: dict, x: jax.Array) -> jax.Array:
+    x = constrain(x, "dp", None, None)  # SP gather at MLP entry
+    gate = constrain(x @ p["wi_gate"], "dp", None, "tp")
+    up = constrain(x @ p["wi_up"], "dp", None, "tp")
+    return constrain((jax.nn.silu(gate) * up) @ p["wo"], "dp", "sp", None)

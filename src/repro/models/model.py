@@ -1,0 +1,735 @@
+"""Unified model: schema, init, train forward, prefill, decode — all families.
+
+Layers are scanned (stacked params, one lowered layer body) so HLO size and
+compile time stay bounded at 100-layer scale; heterogeneous structures use:
+
+  * hybrid — lax.cond inside the scan applies the weight-shared attention
+    block every ``hybrid_attn_every`` layers (zamba2)
+  * vlm    — grouped scan: (cross_attn_every - 1) self layers scanned inside
+    each group, then one gated cross-attention layer (llama-3.2-vision)
+
+Caches are stacked on the layer (or application/group) dimension and scanned
+together with the layer params during decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef, init_params, param_specs, stack_schema
+
+__all__ = [
+    "model_schema",
+    "init_model",
+    "model_param_specs",
+    "forward_train",
+    "loss_fn",
+    "forward_prefill",
+    "decode_step",
+    "init_cache",
+    "count_params_analytical",
+]
+
+
+# ------------------------------------------------------------------- schema
+
+
+def _layer_schema(cfg: ModelConfig) -> dict:
+    """One stackable decoder/encoder layer."""
+    s: dict[str, Any] = {}
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        s["ln"] = L.norm_schema(cfg.d_model)
+        s["ssm"] = SSM.ssm_schema(cfg)
+        return s
+    s["ln1"] = L.norm_schema(cfg.d_model)
+    if cfg.attention == "mla":
+        s["attn"] = L.mla_schema(cfg)
+    else:
+        s["attn"] = L.attn_schema(cfg)
+    s["ln2"] = L.norm_schema(cfg.d_model)
+    if cfg.family == "moe":
+        s["moe"] = MOE.moe_schema(cfg)
+    else:
+        s["mlp"] = L.mlp_schema(cfg)
+    return s
+
+
+def _cross_layer_schema(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_schema(cfg.d_model),
+        "xattn": L.attn_schema(cfg, cross=True),
+        "ln2": L.norm_schema(cfg.d_model),
+        "mlp": L.mlp_schema(cfg),
+    }
+
+
+def _shared_block_schema(cfg: ModelConfig) -> dict:
+    """zamba2's weight-shared attention+MLP block (applied at intervals)."""
+    return {
+        "ln1": L.norm_schema(cfg.d_model),
+        "attn": L.attn_schema(cfg),
+        "ln2": L.norm_schema(cfg.d_model),
+        "mlp": L.mlp_schema(cfg),
+    }
+
+
+def vlm_counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, self_per_group, n_cross) for the grouped vlm scan."""
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    return n_groups, every - 1, n_groups
+
+
+def hybrid_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, trailing) — zamba2: shared attn after every `every` mamba
+    layers; `trailing` mamba layers close the stack without attention."""
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    return n_groups, cfg.n_layers - n_groups * every
+
+
+def _hybrid_split(cfg: ModelConfig, stacked):
+    """Reshape stacked [L, ...] layer params into ([G, every, ...], [T, ...])."""
+    n_groups, trailing = hybrid_counts(cfg)
+    every = cfg.hybrid_attn_every
+    head = jax.tree.map(
+        lambda x: x[: n_groups * every].reshape(n_groups, every, *x.shape[1:]),
+        stacked,
+    )
+    tail = jax.tree.map(lambda x: x[n_groups * every :], stacked)
+    return head, tail
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    s: dict[str, Any] = {}
+    d, v = cfg.d_model, cfg.padded_vocab
+    # The 'vocab' logical axis maps to 'model' in BOTH profiles: the
+    # embedding/lm_head are the dominant matrices of small archs and their
+    # weight-grad einsums need the vocab dim sharded (otherwise GSPMD
+    # gathers the full-batch logits cotangent — measured 13 GB/device).
+    if cfg.family == "audio":
+        s["frontend"] = ParamDef((cfg.d_frontend, d), "normal", ("fsdp", "tp"))
+    else:
+        s["tok_embed"] = ParamDef((v, d), "embed", ("vocab", "fsdp"))
+    if cfg.family == "vlm":
+        s["img_proj"] = ParamDef((cfg.d_frontend, d), "normal", ("fsdp", "tp"))
+        n_groups, self_per, n_cross = vlm_counts(cfg)
+        s["layers"] = stack_schema(
+            stack_schema(_layer_schema(cfg), self_per), n_groups
+        )
+        s["cross_layers"] = stack_schema(_cross_layer_schema(cfg), n_groups)
+    else:
+        s["layers"] = stack_schema(_layer_schema(cfg), cfg.n_layers)
+    if cfg.family == "hybrid":
+        s["shared"] = _shared_block_schema(cfg)
+    s["final_norm"] = L.norm_schema(d)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamDef((d, v), "normal", ("fsdp", "vocab"))
+    return s
+
+
+def init_model(key: jax.Array, cfg: ModelConfig):
+    return init_params(key, model_schema(cfg), getattr(jnp, cfg.dtype))
+
+
+def model_param_specs(cfg: ModelConfig):
+    return param_specs(model_schema(cfg))
+
+
+def count_params_analytical(cfg: ModelConfig, active_only: bool = False) -> int:
+    import numpy as np
+
+    schema = model_schema(cfg)
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    total = sum(int(np.prod(d.shape)) for d in leaves)
+    if active_only and cfg.family == "moe":
+        expert_leaves = jax.tree.leaves(
+            {"g": MOE.moe_schema(cfg)}, is_leaf=lambda x: isinstance(x, ParamDef)
+        )
+        per_layer_experts = sum(
+            int(np.prod(d.shape)) for d in expert_leaves if len(d.shape) == 3
+        )
+        inactive = (
+            per_layer_experts
+            * cfg.n_layers
+            * (cfg.n_experts - cfg.experts_per_token)
+            // cfg.n_experts
+        )
+        total -= inactive
+    return total
+
+
+# ----------------------------------------------------------- layer execution
+
+
+def _dense_layer(lp, x, positions, cfg: ModelConfig, aux_acc):
+    # Sequence-parallel residual stream: the scan carry (== the saved
+    # backprop residual) stays seq-sharded over 'model' between layers.
+    x = constrain(x, "dp", "sp", None)
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, _ = L.mla_forward(lp["attn"], h, positions, cfg)
+    else:
+        a, _ = L.attn_forward(lp["attn"], h, positions, cfg)
+    x = x + a
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = MOE.moe_forward(lp["moe"], h, cfg)
+        aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
+    else:
+        m = L.mlp_forward(lp["mlp"], h)
+    return x + m, aux_acc
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+def _mask_pad_logits(logits, cfg: ModelConfig):
+    """padded_vocab > vocab: pad columns get -inf (softmax/argmax-neutral)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    idx = jnp.arange(cfg.padded_vocab)
+    return jnp.where(idx < cfg.vocab, logits, -1e30)
+
+
+# ------------------------------------------------------------- train forward
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig):
+    """Full training forward: returns (logits [B,S,V], aux metrics dict).
+
+    batch keys: 'tokens' (decoder) | 'frames' (audio); 'image_embeds' (vlm).
+    """
+    if cfg.family == "audio":
+        x = batch["frames"].astype(getattr(jnp, cfg.dtype)) @ params["frontend"]
+        bsz, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        x = jnp.take(params["tok_embed"], tokens, axis=0)
+    # Anchor the batch/seq layout right at the entry: the embedding gather
+    # would otherwise propagate the table's ZeRO sharding onto d_model and
+    # let GSPMD gather the batch instead (fatal for the pure-DP profile).
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+    aux0 = {}
+
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype) @ params["img_proj"]
+
+        def group_body(carry, gp):
+            x, aux = carry
+            self_lps, cross_lp = gp
+
+            def inner(carry2, lp):
+                x2, aux2 = carry2
+                x2, aux2 = _dense_layer(lp, x2, positions, cfg, aux2)
+                return (x2, aux2), None
+
+            # Nested remat: the group bwd re-runs this inner scan, which
+            # itself only keeps per-layer carries.
+            (x, aux), _ = jax.lax.scan(_remat(inner, cfg), (x, aux), self_lps)
+            h = L.rmsnorm(x, cross_lp["ln1"], cfg.norm_eps)
+            a, _ = L.attn_forward(cross_lp["xattn"], h, positions, cfg, kv_x=img)
+            x = x + a
+            h = L.rmsnorm(x, cross_lp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_forward(cross_lp["mlp"], h)
+            return (x, aux), None
+
+        # Remat at GROUP granularity: only the 20 group carries are saved;
+        # the 4 self layers + cross layer recompute in bwd.
+        group_r = _remat(group_body, cfg)
+        (x, aux), _ = jax.lax.scan(
+            group_r, (x, aux0), (params["layers"], params["cross_layers"])
+        )
+    elif cfg.family in ("ssm", "hybrid"):
+
+        def mamba_body(carry, lp):
+            x, aux = carry
+            x = constrain(x, "dp", "sp", None)
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            o, _ = SSM.ssm_forward(lp["ssm"], h, cfg)
+            return (x + o, aux), None
+
+        mamba_r = _remat(mamba_body, cfg)
+        if cfg.family == "ssm":
+            (x, aux), _ = jax.lax.scan(mamba_r, (x, aux0), params["layers"])
+        else:
+            head, tail = _hybrid_split(cfg, params["layers"])
+            sp = params["shared"]
+
+            def shared_block(x):
+                h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                a, kv = L.attn_forward(sp["attn"], h, positions, cfg)
+                x = x + a
+                h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+                return x + L.mlp_forward(sp["mlp"], h), kv
+
+            shared_r = _remat(shared_block, cfg)
+
+            def group_body(carry, group_lps):
+                x, aux = carry
+                (x, aux), _ = jax.lax.scan(mamba_r, (x, aux), group_lps)
+                x, _ = shared_r(x)
+                return (x, aux), None
+
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux0), head)
+            (x, aux), _ = jax.lax.scan(mamba_r, (x, aux), tail)
+    else:  # dense / moe / audio
+
+        def body(carry, lp):
+            x, aux = carry
+            x, aux = _dense_layer(lp, x, positions, cfg, aux)
+            return (x, aux), None
+
+        body_r = _remat(body, cfg)
+        # MoE aux metrics must exist in the carry with stable structure.
+        if cfg.family == "moe":
+            aux0 = {
+                "moe_balance_loss": jnp.float32(0.0),
+                "moe_z_loss": jnp.float32(0.0),
+                "moe_dropped_frac": jnp.float32(0.0),
+            }
+        (x, aux), _ = jax.lax.scan(body_r, (x, aux0), params["layers"])
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["tok_embed"])
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.family == "moe":
+        aux = {k: v / cfg.n_layers for k, v in aux.items()}
+    return _mask_pad_logits(logits.astype(jnp.float32), cfg), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, logits_spec_constraint=None):
+    """Cross-entropy loss (+ MoE aux). Decoder: next-token; audio: masked pred."""
+    logits, aux = forward_train(params, batch, cfg)
+    if logits_spec_constraint is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_spec_constraint)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if cfg.family == "audio":
+        mask = batch["mask"].astype(jnp.float32)
+        loss = (ce * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    else:
+        loss = ce.mean()
+    metrics = {"ce_loss": loss, **aux}
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux["moe_balance_loss"]
+        loss = loss + 1e-4 * aux["moe_z_loss"]
+    return loss, metrics
+
+
+# -------------------------------------------------------------- KV/SSM cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked decode cache for the whole model. dtype bf16 (f32 ssm states)."""
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    if cfg.family == "audio":
+        return {}  # encoder-only: no decode state
+    if cfg.family in ("ssm", "hybrid"):
+        one = SSM.ssm_state_shapes(cfg, batch)
+        states = jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_layers, *x.shape), x.dtype), one
+        )
+        cache = {"ssm": states}
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            n_apps = cfg.n_layers // cfg.hybrid_attn_every
+            cache["shared_k"] = jnp.zeros(
+                (n_apps, batch, max_seq, kvh, hd), jnp.bfloat16
+            )
+            cache["shared_v"] = jnp.zeros(
+                (n_apps, batch, max_seq, kvh, hd), jnp.bfloat16
+            )
+        return cache
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros(
+                (cfg.n_layers, batch, max_seq, cfg.kv_lora_rank), jnp.bfloat16
+            ),
+            "krope": jnp.zeros(
+                (cfg.n_layers, batch, max_seq, cfg.qk_rope_dim), jnp.bfloat16
+            ),
+        }
+    if cfg.family == "vlm":
+        n_groups, self_per, n_cross = vlm_counts(cfg)
+        return {
+            "k": jnp.zeros((n_groups, self_per, batch, max_seq, kvh, hd), jnp.bfloat16),
+            "v": jnp.zeros((n_groups, self_per, batch, max_seq, kvh, hd), jnp.bfloat16),
+            "xk": jnp.zeros((n_groups, batch, cfg.n_image_tokens, kvh, hd), jnp.bfloat16),
+            "xv": jnp.zeros((n_groups, batch, cfg.n_image_tokens, kvh, hd), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, kvh, hd), jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, kvh, hd), jnp.bfloat16),
+    }
+
+
+# ------------------------------------------------------------------- decode
+
+
+def _embed_tokens(params, tokens):
+    return jnp.take(params["tok_embed"], tokens, axis=0)
+
+
+def _row(stacked, i):
+    return jax.lax.dynamic_index_in_dim(stacked, i, 0, keepdims=False)
+
+
+def _put(stacked, row, i):
+    return jax.lax.dynamic_update_index_in_dim(stacked, row, i, 0)
+
+
+def decode_step(params, cache: dict, token: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                image_embeds: jax.Array | None = None):
+    """One decode step. token: [B, 1] int32; pos: scalar int32.
+
+    Returns (logits [B, vocab] f32, new_cache). VLM cross K/V must be
+    prefilled (forward_prefill); image_embeds is accepted for API symmetry.
+
+    Memory discipline: big caches travel in the scan CARRY and are updated
+    with dynamic_update_index on the (unsharded) layer dim — XLA performs
+    these in place on the donated buffer. Passing caches as scan xs/ys
+    instead costs ~3x the cache in live buffers (measured; see §Perf).
+    """
+    x = _embed_tokens(params, token)
+    bsz = x.shape[0]
+
+    if cfg.family in ("ssm", "hybrid"):
+
+        def mamba_body(carry, inp):
+            x, = carry
+            lp, st = inp
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            o, new_st = SSM.ssm_decode(lp["ssm"], h, cfg, st)
+            return (x + o,), new_st
+
+        if cfg.family == "ssm":
+            (x,), new_states = jax.lax.scan(
+                mamba_body, (x,), (params["layers"], cache["ssm"])
+            )
+            new_cache = {"ssm": new_states}
+        else:
+            n_groups, trailing = hybrid_counts(cfg)
+            every = cfg.hybrid_attn_every
+            head, tail = _hybrid_split(cfg, params["layers"])
+            st_head, st_tail = _hybrid_split(cfg, cache["ssm"])
+            sp = params["shared"]
+
+            def group_body(carry, inp):
+                x, kc, vc = carry
+                group_lps, group_sts, gi = inp
+                (x,), new_sts = jax.lax.scan(mamba_body, (x,), (group_lps, group_sts))
+                h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                a, nk, nv = L.attn_decode(
+                    sp["attn"], h, pos, _row(kc, gi), _row(vc, gi), cfg
+                )
+                x = x + a
+                h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+                x = x + L.mlp_forward(sp["mlp"], h)
+                return (x, _put(kc, nk, gi), _put(vc, nv, gi)), new_sts
+
+            (x, nks, nvs), head_sts = jax.lax.scan(
+                group_body,
+                (x, cache["shared_k"], cache["shared_v"]),
+                (head, st_head, jnp.arange(n_groups)),
+            )
+            (x,), tail_sts = jax.lax.scan(mamba_body, (x,), (tail, st_tail))
+            new_states = jax.tree.map(
+                lambda h, t: jnp.concatenate(
+                    [h.reshape(n_groups * every, *h.shape[2:]), t], axis=0
+                ),
+                head_sts,
+                tail_sts,
+            )
+            new_cache = {"ssm": new_states, "shared_k": nks, "shared_v": nvs}
+    elif cfg.family == "vlm":
+        # Cross K/V are static during decode and must be prefilled into the
+        # cache (forward_prefill); image_embeds is accepted for API symmetry.
+        n_groups, self_per, _ = vlm_counts(cfg)
+        positions = jnp.full((bsz, 1), pos, jnp.int32)
+
+        def group_body(carry, gp):
+            x, kc, vc = carry
+            self_lps, cross_lp, xk, xv, gi = gp
+            kg, vg = _row(kc, gi), _row(vc, gi)  # [sp, B, S, K, hd]
+
+            def inner(carry2, inp2):
+                x2, kg, vg = carry2
+                lp, li = inp2
+                h = L.rmsnorm(x2, lp["ln1"], cfg.norm_eps)
+                a, nk, nv = L.attn_decode(
+                    lp["attn"], h, pos, _row(kg, li), _row(vg, li), cfg
+                )
+                x2 = x2 + a + _post_mlp(lp, x2 + a, cfg)
+                return (x2, _put(kg, nk, li), _put(vg, nv, li)), None
+
+            (x, kg, vg), _ = jax.lax.scan(
+                inner, (x, kg, vg), (self_lps, jnp.arange(self_per))
+            )
+            h = L.rmsnorm(x, cross_lp["ln1"], cfg.norm_eps)
+            # Cross K/V are static during decode; use cached values.
+            q, _, _ = L._project_qkv(cross_lp["xattn"], h, h, cfg)
+            kx = xk.astype(q.dtype)
+            vx = xv.astype(q.dtype)
+            npos = jnp.zeros((bsz, kx.shape[1]), jnp.int32)
+            o = L.attention_op(q, kx, vx, positions, npos, False)
+            o = o.reshape(bsz, 1, -1) @ cross_lp["xattn"]["wo"]
+            gate = jnp.tanh(cross_lp["xattn"]["gate"].astype(jnp.float32)).astype(o.dtype)
+            x = x + gate * o
+            h = L.rmsnorm(x, cross_lp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_forward(cross_lp["mlp"], h)
+            return (x, _put(kc, kg, gi), _put(vc, vg, gi)), None
+
+        (x, nks, nvs), _ = jax.lax.scan(
+            group_body,
+            (x, cache["k"], cache["v"]),
+            (
+                params["layers"],
+                params["cross_layers"],
+                cache["xk"],
+                cache["xv"],
+                jnp.arange(n_groups),
+            ),
+        )
+        new_cache = {"k": nks, "v": nvs, "xk": cache["xk"], "xv": cache["xv"]}
+    else:  # dense / moe
+        if cfg.attention == "mla":
+            def body(carry, inp):
+                x, cc, krc = carry
+                lp, li = inp
+                h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nckv, nkr = L.mla_decode(
+                    lp["attn"], h, pos, _row(cc, li), _row(krc, li), cfg
+                )
+                x = x + a
+                x = x + _post_mlp(lp, x, cfg)
+                return (x, _put(cc, nckv, li), _put(krc, nkr, li)), None
+
+            (x, nckv, nkr), _ = jax.lax.scan(
+                body,
+                (x, cache["ckv"], cache["krope"]),
+                (params["layers"], jnp.arange(cfg.n_layers)),
+            )
+            new_cache = {"ckv": nckv, "krope": nkr}
+        else:
+            def body(carry, inp):
+                x, kc, vc = carry
+                lp, li = inp
+                h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nk, nv = L.attn_decode(
+                    lp["attn"], h, pos, _row(kc, li), _row(vc, li), cfg
+                )
+                x = x + a
+                x = x + _post_mlp(lp, x, cfg)
+                return (x, _put(kc, nk, li), _put(vc, nv, li)), None
+
+            (x, nk, nv), _ = jax.lax.scan(
+                body,
+                (x, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.n_layers)),
+            )
+            new_cache = {"k": nk, "v": nv}
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["tok_embed"])
+    else:
+        logits = x @ params["lm_head"]
+    return _mask_pad_logits(logits[:, 0].astype(jnp.float32), cfg), new_cache
+
+
+def _post_mlp(lp, x, cfg: ModelConfig):
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        # Decode (S==1): one group per token — keeps the batch dim sharded and
+        # is provably drop-free. Longer sequences use the train grouping so
+        # prefill routing (and drops) match forward_train exactly.
+        group = 1 if x.shape[1] == 1 else min(1024, x.shape[0] * x.shape[1])
+        m, _ = MOE.moe_forward(lp["moe"], h, cfg, group_size=group)
+        return m
+    return L.mlp_forward(lp["mlp"], h)
+
+
+# ------------------------------------------------------------------ prefill
+
+
+def forward_prefill(params, batch: dict, cache: dict, cfg: ModelConfig):
+    """Prefill: full forward that also populates the decode cache.
+
+    Returns (last-position logits [B, vocab], cache). Implemented as the
+    train forward plus cache writes; decode shapes lower `decode_step`, this
+    lowers for the `prefill_*` input shapes.
+    """
+    if cfg.family == "audio":
+        # Encoder-only: "prefill" is a plain full forward (no decode cache).
+        logits_full, _ = forward_train(params, batch, cfg)
+        return logits_full[:, -1].astype(jnp.float32), {}
+    tokens = batch["tokens"] if "tokens" in batch else None
+    x = _embed_tokens(params, tokens)
+    bsz, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+
+    if cfg.family in ("ssm", "hybrid"):
+        smax_attn = cache["shared_k"].shape[2] if "shared_k" in cache else 0
+
+        def pad_seq(arr, size):
+            pad = size - arr.shape[1]
+            return jnp.pad(arr, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else arr
+
+        def mamba_body(carry, lp):
+            x, = carry
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            o, new_st = SSM.ssm_forward(lp["ssm"], h, cfg, state=None)
+            return (x + o,), new_st
+
+        mamba_r = _remat(mamba_body, cfg)
+        if cfg.family == "ssm":
+            (x,), new_states = jax.lax.scan(mamba_r, (x,), params["layers"])
+            new_cache = {"ssm": new_states}
+        else:
+            n_groups, trailing = hybrid_counts(cfg)
+            every = cfg.hybrid_attn_every
+            head, tail = _hybrid_split(cfg, params["layers"])
+            sp = params["shared"]
+
+            def group_body(carry, group_lps):
+                x, = carry
+                (x,), new_sts = jax.lax.scan(mamba_r, (x,), group_lps)
+                h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                a, (k, v) = L.attn_forward(sp["attn"], h, positions, cfg)
+                x = x + a
+                h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+                x = x + L.mlp_forward(sp["mlp"], h)
+                return (x,), (
+                    new_sts,
+                    pad_seq(k.astype(jnp.bfloat16), smax_attn),
+                    pad_seq(v.astype(jnp.bfloat16), smax_attn),
+                )
+
+            (x,), (head_sts, ks, vs) = jax.lax.scan(group_body, (x,), head)
+            (x,), tail_sts = jax.lax.scan(mamba_r, (x,), tail)
+            new_states = jax.tree.map(
+                lambda h_, t_: jnp.concatenate(
+                    [h_.reshape(n_groups * every, *h_.shape[2:]), t_], axis=0
+                ),
+                head_sts,
+                tail_sts,
+            )
+            new_cache = {"ssm": new_states, "shared_k": ks, "shared_v": vs}
+    else:
+        # Attention families: one pass that both fills the caches and yields
+        # the final residual stream; only last-position logits materialize
+        # (a full [B, S, V] f32 logits tensor would be GBs at 32k prefill).
+        x, new_cache = _fill_attention_cache(params, batch, cache, cfg)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["tok_embed"])
+    else:
+        logits = x[:, -1:] @ params["lm_head"]
+    return _mask_pad_logits(logits[:, 0].astype(jnp.float32), cfg), new_cache
+
+
+def _fill_attention_cache(params, batch, cache, cfg: ModelConfig):
+    """Populate KV caches by scanning layers once (projection-only pass).
+
+    NOTE: this recomputes the residual stream (cheap relative to decode use);
+    exactness is asserted in tests (decode == teacher forcing).
+    """
+    tokens = batch.get("tokens")
+    x = _embed_tokens(params, tokens)
+    bsz, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+    smax = (cache["k"].shape[-3] if "k" in cache else cache["ckv"].shape[-2])
+
+    def pad_to(arr, size, axis):
+        pad = size - arr.shape[axis]
+        if pad <= 0:
+            return arr
+        widths = [(0, 0)] * arr.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(arr, widths)
+
+    def to_cache_layout(kv):  # [B, S, K, hd] -> cache sharding (seq on model)
+        return constrain(kv, "dp", "tp", None, None)
+
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype) @ params["img_proj"]
+
+        def group_body(carry, gp):
+            x, = carry
+            self_lps, cross_lp = gp
+
+            def inner(carry2, lp):
+                x2, = carry2
+                h = L.rmsnorm(x2, lp["ln1"], cfg.norm_eps)
+                a, (k, v) = L.attn_forward(lp["attn"], h, positions, cfg)
+                x2 = x2 + a
+                x2 = x2 + _post_mlp(lp, x2, cfg)
+                return (x2,), (
+                    to_cache_layout(pad_to(k.astype(jnp.bfloat16), smax, 1)),
+                    to_cache_layout(pad_to(v.astype(jnp.bfloat16), smax, 1)),
+                )
+
+            (x,), (ks, vs) = jax.lax.scan(inner, (x,), self_lps)
+            h = L.rmsnorm(x, cross_lp["ln1"], cfg.norm_eps)
+            a, (xk, xv) = L.attn_forward(cross_lp["xattn"], h, positions, cfg, kv_x=img)
+            x = x + a
+            h = L.rmsnorm(x, cross_lp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_forward(cross_lp["mlp"], h)
+            return (x,), (ks, vs, xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16))
+
+        (x,), (ks, vs, xks, xvs) = jax.lax.scan(
+            group_body, (x,), (params["layers"], params["cross_layers"])
+        )
+        return x, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+    if cfg.attention == "mla":
+        def body(carry, lp):
+            x2, = carry
+            h = L.rmsnorm(x2, lp["ln1"], cfg.norm_eps)
+            a, (ckv, krope) = L.mla_forward(lp["attn"], h, positions, cfg)
+            x2 = x2 + a
+            x2 = x2 + _post_mlp(lp, x2, cfg)
+            return (x2,), (
+                constrain(pad_to(ckv.astype(jnp.bfloat16), smax, 1), "dp", "tp", None),
+                constrain(pad_to(krope.astype(jnp.bfloat16), smax, 1), "dp", "tp", None),
+            )
+
+        (x,), (ckvs, kropes) = jax.lax.scan(body, (x,), params["layers"])
+        return x, {"ckv": ckvs, "krope": kropes}
+
+    def body(carry, lp):
+        x2, = carry
+        h = L.rmsnorm(x2, lp["ln1"], cfg.norm_eps)
+        a, (k, v) = L.attn_forward(lp["attn"], h, positions, cfg)
+        x2 = x2 + a
+        x2 = x2 + _post_mlp(lp, x2, cfg)
+        return (x2,), (
+            to_cache_layout(pad_to(k.astype(jnp.bfloat16), smax, 1)),
+            to_cache_layout(pad_to(v.astype(jnp.bfloat16), smax, 1)),
+        )
+
+    (x,), (ks, vs) = jax.lax.scan(body, (x,), params["layers"])
+    return x, {"k": ks, "v": vs}

@@ -1,0 +1,104 @@
+"""Schema-driven parameter system.
+
+A module's parameters are declared once as a nested dict of ``ParamDef``
+(shape, init kind, logical partition axes). From one schema we derive:
+
+  * ``init_params``  — materialized jnp arrays (PRNG-split per leaf path)
+  * ``param_specs``  — the matching ``PartitionSpec`` tree for pjit
+  * ``stack_schema`` — the scan-over-layers form ([L, ...] leaves)
+
+Keeping init and sharding in one definition makes structural drift between
+params and specs impossible (tests assert tree equality anyway).
+
+Logical axis names -> mesh axes (see distributed/lm_sharding.py):
+  'fsdp'  -> 'data'   (ZeRO-3 style parameter/optimizer sharding)
+  'tp'    -> 'model'  (tensor parallel)
+  None    -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ParamDef", "init_params", "param_specs", "stack_schema", "tree_bytes"]
+
+Schema = dict[str, Any]  # nested dicts with ParamDef leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    init: str = "normal"  # normal|zeros|ones|scaled|embed|a_log|dt_bias
+    axes: tuple[str | None, ...] = ()  # logical partition per dim
+    scale: float = 0.02  # stddev for normal-family inits
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init in ("normal", "scaled", "embed"):
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+    if d.init == "a_log":
+        # Mamba2: A ~ -exp(A_log), A_log init log(U[1, 16]).
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)  # keep f32 for stability
+    if d.init == "dt_bias":
+        # Inverse softplus of dt ~ U[1e-3, 1e-1].
+        dt = jnp.exp(
+            jax.random.uniform(key, d.shape, jnp.float32)
+            * (np.log(0.1) - np.log(1e-3))
+            + np.log(1e-3)
+        )
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(key: jax.Array, schema: Schema, dtype=jnp.bfloat16):
+    """Materialize a schema. PRNG folded by flattened leaf index (stable)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves, strict=True)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+_LOGICAL_TO_MESH = {"fsdp": "data", "tp": "model", "vocab": "model", None: None}
+
+
+def param_specs(schema: Schema, logical_to_mesh: dict | None = None):
+    """PartitionSpec tree matching the schema structure."""
+    table = _LOGICAL_TO_MESH if logical_to_mesh is None else logical_to_mesh
+
+    def leaf(d: ParamDef):
+        axes = d.axes if d.axes else (None,) * len(d.shape)
+        return P(*[table.get(a, None) for a in axes])
+
+    return jax.tree.map(leaf, schema, is_leaf=_is_def)
+
+
+def stack_schema(schema: Schema, n: int) -> Schema:
+    """Prepend a stacked-layer dim of size n to every leaf (scan form)."""
+
+    def leaf(d: ParamDef):
+        axes = d.axes if d.axes else (None,) * len(d.shape)
+        return ParamDef((n, *d.shape), d.init, (None, *axes), d.scale)
+
+    return jax.tree.map(leaf, schema, is_leaf=_is_def)
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

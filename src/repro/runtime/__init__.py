@@ -1,0 +1,4 @@
+from repro.runtime.fault import FailureInjector, StragglerMonitor
+from repro.runtime.elastic import elastic_remesh_plan
+
+__all__ = ["FailureInjector", "StragglerMonitor", "elastic_remesh_plan"]

@@ -1,0 +1,80 @@
+"""Elastic re-meshing: resume the same logical job on a different mesh.
+
+Checkpoints are stored *unsharded-logical* (host numpy per leaf), so elastic
+scaling is: pick the new mesh shape, rebuild shardings from the same spec
+trees, device_put the restored leaves. Two constraints are checked here:
+
+  * the 'model' axis must keep its size (TP degree is baked into layouts
+    that divide head counts / ffn dims — changing it is a *resharding*
+    plan, supported but flagged);
+  * batch axes only need global_batch % dp == 0.
+
+For the TC engine, elasticity is cheaper still: the work list is re-dealt
+(`shard_worklist`) over the surviving device count — the reduction is a
+commutative monoid, so any re-partition of pair stripes is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["elastic_remesh_plan", "RemeshPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    ok: bool
+    reasons: tuple[str, ...]
+
+    @property
+    def new_device_count(self) -> int:
+        out = 1
+        for s in self.new_shape:
+            out *= s
+        return out
+
+
+def elastic_remesh_plan(
+    old_shape: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    available_devices: int,
+    global_batch: int,
+    model_axis: str = "model",
+) -> RemeshPlan:
+    """Choose the largest valid mesh after losing/gaining devices.
+
+    Strategy: keep the model axis fixed; shrink the data axis to the largest
+    divisor that fits; drop the pod axis to 1 if necessary.
+    """
+    shape = dict(zip(axis_names, old_shape))
+    model = shape.get(model_axis, 1)
+    reasons: list[str] = []
+    if available_devices < model:
+        return RemeshPlan(
+            old_shape, old_shape, axis_names, False,
+            (f"need >= {model} devices to keep the model axis", ),
+        )
+    budget = available_devices // model
+    new_pod = 1
+    if "pod" in shape:
+        new_pod = min(shape["pod"], budget)
+        while budget % new_pod:
+            new_pod -= 1
+        budget //= new_pod
+        if new_pod != shape["pod"]:
+            reasons.append(f"pod axis {shape['pod']} -> {new_pod}")
+    new_data = min(shape.get("data", 1), budget)
+    while new_data > 1 and global_batch % (new_data * new_pod):
+        new_data -= 1
+    if new_pod > 1 and global_batch % (new_data * new_pod):
+        # Batch can't split across pods either: collapse to one pod.
+        reasons.append(f"pod axis {new_pod} -> 1 (batch divisibility)")
+        new_pod = 1
+    if new_data != shape.get("data", 1):
+        reasons.append(f"data axis {shape.get('data', 1)} -> {new_data}")
+    new_shape = tuple(
+        {"pod": new_pod, "data": new_data, model_axis: model}[n] for n in axis_names
+    )
+    return RemeshPlan(old_shape, new_shape, axis_names, True, tuple(reasons))

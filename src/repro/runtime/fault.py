@@ -1,0 +1,83 @@
+"""Fault-tolerance runtime pieces: failure injection + straggler detection.
+
+At 1000+ nodes the mean time between hardware failures is minutes-to-hours;
+the design here is checkpoint/restart (the only strategy that composes with
+XLA SPMD's gang-scheduled execution) plus:
+
+  * ``FailureInjector`` — deterministic chaos-monkey for tests/examples:
+    raises SimulatedFailure at configured steps; the driver's restart path
+    (examples/fault_tolerant_train.py, tests/test_runtime.py) proves
+    bit-exact resume from the last committed checkpoint.
+  * ``StragglerMonitor`` — EWMA step-time tracker. On real pods, persistent
+    stragglers (failing HBM, thermal throttling) show up as a stable
+    multiplicative slowdown of the whole gang; the monitor flags them and
+    the driver's policy is to checkpoint + evict + re-mesh (see
+    elastic.py), which is how production fleets handle it. TC workloads
+    additionally over-decompose the work list (4x blocks per device) so a
+    re-deal rebalances without recompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+__all__ = ["SimulatedFailure", "FailureInjector", "StragglerMonitor"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / examples)."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise SimulatedFailure the first time each configured step is reached."""
+
+    fail_at_steps: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self._fired: set[int] = set()
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    """EWMA step-time outlier detection.
+
+    flag() returns True when the last step exceeded ``threshold`` x the EWMA
+    for ``patience`` consecutive steps — the signature of a persistent
+    straggler rather than a transient (GC pause, incast).
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0, patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma: float | None = None
+        self._strikes = 0
+        self.history: list[float] = []
+        self._t0: float | None = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> bool:
+        assert self._t0 is not None, "start_step() not called"
+        dt = time.perf_counter() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        """Record a step time; returns True if a straggler is flagged."""
+        self.history.append(dt)
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        flagged = dt > self.threshold * self.ewma
+        self._strikes = self._strikes + 1 if flagged else 0
+        # Slow steps polute the EWMA less (winsorised update).
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * min(
+            dt, self.threshold * self.ewma
+        )
+        return self._strikes >= self.patience

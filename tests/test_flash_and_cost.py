@@ -1,0 +1,111 @@
+"""Flash-attention kernel sweeps + HLO cost-model unit tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_cost import hlo_cost
+from repro.kernels.flash_attention import flash_attention_pallas, flash_io_bytes
+
+
+def _ref_attn(q, k, v, qp, kp, causal, hd):
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if causal:
+        s = jnp.where(qp[:, :, None] >= kp[:, None, :], s, -1e30)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1).astype(v.dtype), v)
+
+
+@pytest.mark.parametrize("sq,sk,bq,bk", [(128, 128, 64, 32), (256, 128, 128, 128),
+                                          (64, 256, 64, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, sq, sk, bq, bk, causal, dtype):
+    bh, hd = 3, 32
+    q = jnp.asarray(rng.normal(size=(bh, sq, hd)).astype(np.float32), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, sk, hd)).astype(np.float32), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, sk, hd)).astype(np.float32), dtype)
+    qp = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (bh, sq))
+    kp = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (bh, sk))
+    out = flash_attention_pallas(q, k, v, qp, kp, causal=causal,
+                                 block_q=bq, block_k=bk, interpret=True)
+    want = _ref_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), qp, kp, causal, hd)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_in_model_matches_xla(rng):
+    """Whole-model forward: attention_impl='flash' == 'xla' (interpret mode)."""
+    from repro.configs import get_smoke_config
+    from repro.models.model import forward_train, init_model
+
+    base = get_smoke_config("qwen1.5-110b").scaled(attn_chunk=8, head_dim=32)
+    params = init_model(jax.random.PRNGKey(0), base)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, base.vocab, (2, 64)), jnp.int32)
+    }
+    logits_xla, _ = forward_train(params, batch, base)
+    flash_cfg = dataclasses.replace(base, attention_impl="flash")
+    logits_flash, _ = forward_train(params, batch, flash_cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_xla), np.asarray(logits_flash), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_flash_io_bytes_formula():
+    # 1 bh, sq=sk=4, hd=2, bf16: (4*2)*4 tensors * 2B = 64B fwd; x3 train.
+    assert flash_io_bytes(1, 1, 4, 4, 2, train=False) == 64
+    assert flash_io_bytes(1, 1, 4, 4, 2, train=True) == 192
+
+
+# ------------------------------------------------------------ HLO cost model
+
+
+def _lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_hlo_cost_counts_scan_trips():
+    w = jax.ShapeDtypeStruct((11, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def step(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        return jax.lax.scan(body, x, w)[0]
+
+    hc = hlo_cost(_lower_text(step, x, w))
+    dot_flops = 11 * 2 * 8 * 64 * 64
+    assert 0.95 * dot_flops <= hc.flops <= 1.3 * dot_flops, hc.flops
+    assert hc.unknown_trip_whiles == 0
+
+
+def test_hlo_cost_tag_attribution():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f(a):
+        with jax.named_scope("attn_core"):
+            b = a * 2.0
+        return b + 1.0
+
+    hc = hlo_cost(_lower_text(f, x), tags={"attn": "attn_core"})
+    assert hc.bytes_by_tag is not None
+    # The tagged region moved ~one array in + one out (fused or not).
+    assert hc.bytes_by_tag.get("attn", 0) <= hc.bytes
+    assert hc.bytes > 0 and hc.flops >= 256 * 256
+
+
+def test_hlo_cost_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    hc = hlo_cost(_lower_text(lambda x, y: x @ y, a, b))
+    want = 2 * 32 * 48 * 16
+    assert abs(hc.flops - want) / want < 0.05
+    # bytes ~ operands + output
+    want_bytes = (32 * 48 + 48 * 16 + 32 * 16) * 4
+    assert hc.bytes >= want_bytes

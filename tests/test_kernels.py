@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+All Pallas kernels run in interpret mode on CPU (the validation mode for
+this container); the same pallas_call + BlockSpec lowers to Mosaic on TPU.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("p", [1, 7, 512, 1000, 4096])
+@pytest.mark.parametrize("w", [1, 2, 4, 8])
+def test_popcount_and_items_sweep(rng, p, w):
+    rows = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    cols = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    got = ops.popcount_and_items(rows, cols)
+    want = ref.ref_popcount_and_items(rows, cols)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("p,w", [(1, 2), (100, 2), (5000, 2), (513, 3), (2048, 8)])
+def test_popcount_and_total_sweep(rng, p, w):
+    rows = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    cols = jnp.asarray(rng.integers(0, 2**32, (p, w), dtype=np.uint32))
+    got = int(ops.popcount_and_total(rows, cols, block_rows=8, lanes=256))
+    want = int(ref.ref_popcount_and_total(rows, cols))
+    assert got == want
+
+
+@pytest.mark.parametrize("i,j,w", [(8, 8, 1), (100, 70, 5), (128, 128, 8), (257, 65, 3)])
+def test_bitgemm_sweep(rng, i, j, w):
+    x = jnp.asarray(rng.integers(0, 2**32, (i, w), dtype=np.uint32))
+    y = jnp.asarray(rng.integers(0, 2**32, (j, w), dtype=np.uint32))
+    got = ops.bitgemm(x, y, block_i=64, block_j=64, block_w=2)
+    want = ref.ref_bitgemm(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,block", [(64, 32), (128, 64), (96, 32), (256, 128)])
+@pytest.mark.parametrize("density", [0.02, 0.3])
+def test_dense_mxu_tc_sweep(rng, n, block, density):
+    a = np.triu(rng.random((n, n)) < density, 1)
+    got = int(ops.dense_mxu_tc(jnp.asarray(a.astype(np.float32)), block=block))
+    want = int(ref.ref_dense_tc(jnp.asarray(a.astype(np.float32))))
+    assert got == want
+
+
+def test_kernels_zero_and_full(rng):
+    """Edge cases: all-zero and all-ones operands."""
+    z = jnp.zeros((64, 2), jnp.uint32)
+    f = jnp.full((64, 2), 0xFFFFFFFF, jnp.uint32)
+    assert int(ops.popcount_and_total(z, f)) == 0
+    assert int(ops.popcount_and_total(f, f)) == 64 * 2 * 32
+    np.testing.assert_array_equal(np.asarray(ops.popcount_and_items(f, f)), 64)
+
+
+@pytest.mark.parametrize("n,c", [(4, 4), (10, 33), (64, 64), (3, 100)])
+def test_bitpack_roundtrip(rng, n, c):
+    dense = (rng.random((n, c)) < 0.4).astype(np.uint8)
+    packed = bitpack_matrix(dense)
+    assert packed.dtype == np.uint32
+    np.testing.assert_array_equal(bitunpack_matrix(packed, c), dense)
+    # popcount of packed rows == row sums of dense
+    np.testing.assert_array_equal(
+        popcount_u32(packed).sum(axis=1), dense.sum(axis=1).astype(np.uint32)
+    )
+
+
+def test_swar_matches_lax_popcount(rng):
+    import jax
+    from repro.kernels.common import swar_popcount_u32
+
+    x = jnp.asarray(rng.integers(0, 2**32, (1000,), dtype=np.uint32))
+    got = swar_popcount_u32(x)
+    want = jax.lax.population_count(x).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

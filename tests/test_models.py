@@ -1,0 +1,143 @@
+"""Per-arch smoke tests + decode==teacher-forcing + train-loss-decreases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models.model import (
+    count_params_analytical,
+    decode_step,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_model,
+    loss_fn,
+    model_param_specs,
+    model_schema,
+)
+from repro.models.params import init_params, tree_bytes
+
+
+def _batch(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(b, s, cfg.d_frontend)).astype(np.float32)),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), dtype=jnp.int32),
+            "mask": jnp.asarray(rng.random((b, s)) < 0.3),
+        }
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), dtype=jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), dtype=jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_image_tokens, cfg.d_frontend)).astype(np.float32)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    logits, aux = forward_train(params, batch, cfg)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    loss, metrics = loss_fn(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    # Random init -> loss ~ ln(vocab).
+    assert abs(float(metrics["ce_loss"]) - np.log(cfg.vocab)) < 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step(arch):
+    """One SGD step on CPU must run and reduce nothing to NaN."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 2, 16)
+    grads_fn = jax.jit(jax.grad(lambda p, bt: loss_fn(p, bt, cfg)[0]))
+    grads = grads_fn(params, batch)
+    new_params = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype), params, grads)
+    loss2, _ = loss_fn(new_params, batch, cfg)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if get_config(a).family != "audio"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s, seed=3)
+    batch.pop("labels")
+    if "mask" in batch:
+        batch.pop("mask")
+    full_logits, _ = forward_train(params, batch, cfg)
+    sp = s - 4
+    cache = init_cache(cfg, b, s)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :sp]
+    last, cache = forward_prefill(params, pre, cache, cfg)
+    errs = [float(jnp.abs(last - full_logits[:, sp - 1]).max())]
+    for t in range(sp, s):
+        logits, cache = decode_step(
+            params, cache, batch["tokens"][:, t : t + 1], jnp.int32(t), cfg
+        )
+        errs.append(float(jnp.abs(logits - full_logits[:, t]).max()))
+    assert max(errs) < 2e-2, errs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_schema_spec_alignment(arch):
+    """param tree and spec tree must be structurally identical, and the
+    analytical param count must equal the materialized one."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    specs = model_param_specs(cfg)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: not isinstance(x, dict)
+    )
+    total = sum(x.size for x in jax.tree.leaves(params))
+    assert total == count_params_analytical(cfg)
+    assert count_params_analytical(cfg, active_only=True) <= total
+    assert tree_bytes(params) > 0
+
+
+def test_full_config_param_counts_match_names():
+    """Sanity: full configs land in the advertised parameter-count ballpark."""
+    expect = {
+        "mamba2-780m": (0.6e9, 1.0e9),
+        "dbrx-132b": (115e9, 140e9),
+        # NOTE: the brief pins 48L x 64 experts; the hf Moonlight checkpoint
+        # has 27 layers — the assigned config therefore lands at ~28B total
+        # (active ~3.5B matches the A3B name at top-6 routing).
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "qwen1.5-110b": (95e9, 120e9),
+        "minicpm3-4b": (3e9, 5e9),
+        "smollm-135m": (0.1e9, 0.17e9),
+        "deepseek-67b": (60e9, 72e9),
+        "llama-3.2-vision-90b": (75e9, 95e9),
+        "zamba2-7b": (6e9, 9e9),
+        "hubert-xlarge": (0.8e9, 1.4e9),  # ~1B encoder + lm/frontend stubs
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_routing_properties():
+    from repro.models import moe as MOE
+
+    cfg = get_smoke_config("dbrx-132b")
+    schema = MOE.moe_schema(cfg)
+    params = init_params(jax.random.PRNGKey(0), schema, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    y, aux = MOE.moe_forward(params, x, cfg, group_size=32)
+    assert y.shape == x.shape
+    # Drop-free capacity in the smoke config.
+    assert float(aux["moe_dropped_frac"]) == 0.0
+    # Balance loss is >= 1 (Switch normalization; ==1 for a perfect router).
+    assert float(aux["moe_balance_loss"]) >= 0.99

@@ -1,0 +1,105 @@
+"""Checkpointing, fault tolerance, straggler detection, elastic planning."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.launch.train import TrainLoop, run_with_auto_resume
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, StragglerMonitor
+from repro.runtime.elastic import elastic_remesh_plan
+from repro.runtime.fault import SimulatedFailure
+
+
+def _tree(rng):
+    return {
+        "a": rng.normal(size=(4, 8)).astype(np.float32),
+        "b": {"c": rng.integers(0, 100, (3,)).astype(np.int32),
+              "d": rng.normal(size=()).astype(np.float32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    save_checkpoint(tmp_path, 7, tree, extra={"note": "x"})
+    restored, step, extra = load_checkpoint(tmp_path, tree)
+    assert step == 7 and extra == {"note": "x"}
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_atomic_commit_and_retention(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    tree = _tree(rng)
+    for s in (10, 20, 30):
+        mgr.save(s, tree)
+    assert latest_step(tmp_path) == 30
+    steps = sorted(p.name for p in tmp_path.iterdir() if p.name.startswith("step_"))
+    assert steps == ["step_00000020", "step_00000030"]  # keep_last=2
+    # An uncommitted dir must be invisible.
+    bogus = tmp_path / "step_00000099"
+    bogus.mkdir()
+    (bogus / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 30
+
+
+def test_checkpoint_async(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(rng)
+    mgr.save_async(5, tree)
+    mgr.wait()
+    restored, step, _ = mgr.restore(tree)
+    assert step == 5
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_failure_injection_and_exact_resume(tmp_path):
+    """Auto-resume after an injected failure reproduces the uninterrupted
+    run exactly (deterministic data + checkpoint restore)."""
+    common = dict(smoke=True, global_batch=2, seq=16, ckpt_every=10,
+                  opt=AdamWConfig(lr=1e-3, weight_decay=0.0))
+    steps = 30
+    loop_a = TrainLoop("smollm-135m", ckpt_dir=None, **common)
+    loop_a.run(steps, log_every=steps)
+    loss_a = loop_a.metrics_log[-1]["loss"]
+
+    loop_b = TrainLoop("smollm-135m", ckpt_dir=str(tmp_path), **common)
+    injector = FailureInjector(fail_at_steps=(17,))
+    (_, _, _), restarts = run_with_auto_resume(loop_b, steps, injector)
+    assert restarts == 1
+    loss_b = loop_b.metrics_log[-1]["loss"]
+    assert abs(loss_a - loss_b) < 1e-5, (loss_a, loss_b)
+
+
+def test_injector_raises_once():
+    inj = FailureInjector(fail_at_steps=(3,))
+    inj.check(2)
+    with pytest.raises(SimulatedFailure):
+        inj.check(3)
+    inj.check(3)  # second visit: no raise (the "node" was replaced)
+
+
+def test_straggler_monitor_flags_persistent_slowdown():
+    mon = StragglerMonitor(alpha=0.2, threshold=2.0, patience=3)
+    flagged = [mon.observe(1.0) for _ in range(10)]
+    assert not any(flagged)
+    flags = [mon.observe(5.0) for _ in range(4)]
+    assert flags[-1], "persistent straggler not flagged"
+    # Single transient spike does not flag.
+    mon2 = StragglerMonitor(patience=3)
+    for _ in range(5):
+        mon2.observe(1.0)
+    assert not mon2.observe(10.0)
+
+
+def test_elastic_remesh_plans():
+    # Lose one pod: 512 -> 271 available keeps model=16, shrinks data.
+    plan = elastic_remesh_plan((2, 16, 16), ("pod", "data", "model"), 271, 256)
+    assert plan.ok and plan.new_shape[2] == 16
+    assert plan.new_device_count <= 271
+    # Too few devices to keep TP.
+    plan2 = elastic_remesh_plan((2, 16, 16), ("pod", "data", "model"), 8, 256)
+    assert not plan2.ok
+    # Exact single pod.
+    plan3 = elastic_remesh_plan((2, 16, 16), ("pod", "data", "model"), 256, 256)
+    assert plan3.ok and plan3.new_device_count == 256

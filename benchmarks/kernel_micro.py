@@ -1,5 +1,19 @@
 """Kernel microbenchmarks (interpret mode on CPU — correctness-path timing;
-TPU performance comes from the §Roofline model, not these numbers)."""
+TPU performance comes from the §Roofline model, not these numbers).
+
+The execute-stage rows compare the fused gather–AND–popcount path against
+the legacy gather-then-kernel path at two levels:
+
+  * ``execute/fused_*`` vs ``execute/unfused_*`` — one chunk, kernel-level:
+    fused computes straight off the device-resident stores; unfused first
+    materializes gathered [P, W] operands, then reduces them.
+  * ``executor/*_multichunk`` — pipeline-level: the Executor (pow2 buckets,
+    device accumulator, one host sync) vs the old per-chunk ``int()``-sync
+    loop with its ragged-tail retrace.
+
+``hbm=`` derived fields carry the modeled execute-stage HBM bytes (the
+quantity a real TCIM/TPU deployment is bound by; see tc_gather_popcount).
+"""
 from __future__ import annotations
 
 import time
@@ -9,7 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core.executor import Executor
+from repro.core.sbf import SlicedBitmap
 from repro.kernels import ops, ref
+from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
 
 def _time(fn, *args, iters=3):
@@ -21,6 +38,44 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _time_host(fn, iters=3):
+    """Wall-clock for paths that end in a host int (sync included)."""
+    fn()  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _synthetic_store(rng, n_rows: int, w: int, slice_bits: int = 64):
+    """A SlicedBitmap-shaped store pair for executor benchmarks."""
+    mk = lambda: rng.integers(0, 2**32, (n_rows, w), dtype=np.uint32)
+    ptr = np.zeros(2, dtype=np.int64)
+    idx = np.zeros(0, dtype=np.int32)
+    return SlicedBitmap(
+        slice_bits=slice_bits,
+        n=1,
+        n_slices=1,
+        row_ptr=ptr,
+        row_slice_idx=idx,
+        row_slice_data=mk(),
+        col_ptr=ptr,
+        col_slice_idx=idx,
+        col_slice_data=mk(),
+    )
+
+
+def _legacy_execute(row_data, col_data, row_pos, col_pos, chunk: int) -> int:
+    """The pre-Executor loop: XLA gather + kernel + per-chunk host sync,
+    ragged last chunk retracing. Kept here as the benchmark baseline."""
+    total = 0
+    for start in range(0, len(row_pos), chunk):
+        rows = jnp.take(row_data, jnp.asarray(row_pos[start : start + chunk]), axis=0)
+        cols = jnp.take(col_data, jnp.asarray(col_pos[start : start + chunk]), axis=0)
+        total += int(ops.popcount_and_total(rows, cols))
+    return total
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     p, w = 1 << 16, 2
@@ -30,6 +85,61 @@ def run() -> None:
     emit("kernel/popcount_and_total_64kpairs", us, f"words={p*w}")
     us = _time(lambda a, b: ref.ref_popcount_and_total(a, b), rows, cols)
     emit("kernel/ref_popcount_total_64kpairs", us, "oracle")
+
+    # Execute stage, one chunk: fused gather–AND–popcount vs gather-then-kernel.
+    n_rows = 1 << 14
+    sb = _synthetic_store(rng, n_rows, w)
+    row_data = jnp.asarray(sb.row_slice_data)
+    col_data = jnp.asarray(sb.col_slice_data)
+    ridx = jnp.asarray(rng.integers(0, n_rows, p, dtype=np.int32))
+    cidx = jnp.asarray(rng.integers(0, n_rows, p, dtype=np.int32))
+    fused = jax.jit(
+        lambda rd, cd, r, c: ops.popcount_and_gather_total(rd, cd, r, c)
+    )
+    us_f = _time(fused, row_data, col_data, ridx, cidx, iters=10)
+    emit(
+        "execute/fused_gather_popcount_64kpairs",
+        us_f,
+        f"hbm={modeled_hbm_bytes(p, w, fused=True)}",
+    )
+    unfused = jax.jit(
+        lambda rd, cd, r, c: ops.popcount_and_total(
+            jnp.take(rd, r, axis=0), jnp.take(cd, c, axis=0)
+        )
+    )
+    us_u = _time(unfused, row_data, col_data, ridx, cidx, iters=10)
+    emit(
+        "execute/unfused_gather_then_kernel_64kpairs",
+        us_u,
+        f"hbm={modeled_hbm_bytes(p, w, fused=False)};"
+        f"fused_speedup={us_u / max(us_f, 1e-9):.2f}x",
+    )
+
+    # Execute stage, multi-chunk: Executor pipeline vs per-chunk-sync loop.
+    pm = 200_000  # ragged: 3 full 64k chunks + a 3k tail
+    chunk = 1 << 16
+    rpos = rng.integers(0, n_rows, pm, dtype=np.int64)
+    cpos = rng.integers(0, n_rows, pm, dtype=np.int64)
+    ex = Executor(sb, chunk_pairs=chunk)
+    want = ex.execute_indices(rpos, cpos)  # warm + reference
+    got = _legacy_execute(row_data, col_data, rpos, cpos, chunk)
+    assert got == want, (got, want)
+    us_ex = _time_host(lambda: ex.execute_indices(rpos, cpos), iters=5)
+    emit(
+        "executor/fused_multichunk_200kpairs",
+        us_ex,
+        f"chunks=4;host_syncs=1;hbm={ex.modeled_hbm_bytes(pm)}",
+    )
+    us_old = _time_host(
+        lambda: _legacy_execute(row_data, col_data, rpos, cpos, chunk), iters=5
+    )
+    emit(
+        "executor/legacy_perchunk_sync_200kpairs",
+        us_old,
+        f"chunks=4;host_syncs=4;hbm={ex.modeled_hbm_bytes(pm, fused=False)};"
+        f"fused_speedup={us_old / max(us_ex, 1e-9):.2f}x",
+    )
+
     x = jnp.asarray(rng.integers(0, 2**32, (512, 16), dtype=np.uint32))
     us = _time(lambda a: ops.bitgemm(a, a), x)
     emit("kernel/bitgemm_512x512x16w", us, "")

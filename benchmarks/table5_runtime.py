@@ -7,9 +7,14 @@ Columns reproduced:
   * wo_pim_s   — our full slicing+reuse pipeline on the host, measured
                  (compress + schedule + jnp execute).
   * tcim_s     — behavioral-model latency of the MRAM array (energymodel).
-  * tcim_tpu_s — beyond-paper: measured execute-stage time of the Pallas
-                 AND+popcount path (interpret mode on CPU; on-TPU numbers
-                 come from the §Roofline model instead).
+  * fused_s    — beyond-paper: measured end-to-end time with the fused
+                 gather–AND–popcount executor (the default pallas_total
+                 backend; vectorized mirror on CPU, Mosaic kernel on TPU).
+  * unfused_s  — same pipeline with the legacy gather-then-kernel execute
+                 stage (operands travel to the compute — the anti-pattern
+                 the fused executor removes); the exec_*/hbm_* derived
+                 fields put the execute-stage time and modeled HBM traffic
+                 of the two side by side.
   * paper_*    — the paper's reported numbers for reference.
 """
 from __future__ import annotations
@@ -19,6 +24,7 @@ from repro.core import baselines
 from repro.core.cachesim import simulate_lru
 from repro.core.energymodel import PAPER_TABLE5, tcim_latency_energy
 from repro.core.tcim import tcim_count_graph
+from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
 
 def run() -> list[dict]:
@@ -33,15 +39,24 @@ def run() -> list[dict]:
         # TCIM: behavioral MRAM model using worklist + cache sim stats.
         cache = simulate_lru(sbf, wl)
         tcim_s, tcim_j = tcim_latency_energy(wl.num_pairs, cache.misses, g.m)
-        # Beyond-paper: Pallas kernel path execute time.
-        with timer() as t_pl:
-            res_pl = tcim_count_graph(g, backend="pallas_total", collect_stats=False)
-        assert res.triangles == tri_cpu == res_pl.triangles, (
-            name, res.triangles, tri_cpu, res_pl.triangles)
+        # Beyond-paper: fused executor vs legacy gather-then-kernel execute.
+        with timer() as t_fused:
+            res_f = tcim_count_graph(g, backend="pallas_total", collect_stats=False)
+        with timer() as t_unf:
+            res_u = tcim_count_graph(g, backend="pallas_unfused", collect_stats=False)
+        assert res.triangles == tri_cpu == res_f.triangles == res_u.triangles, (
+            name, res.triangles, tri_cpu, res_f.triangles, res_u.triangles)
+        wps = sbf.words_per_slice
+        hbm_f = modeled_hbm_bytes(wl.num_pairs, wps, fused=True)
+        hbm_u = modeled_hbm_bytes(wl.num_pairs, wps, fused=False)
+        exec_f = res_f.timings_s["execute"]
+        exec_u = res_u.timings_s["execute"]
         paper = PAPER_TABLE5.get(name, (None,) * 5)
         derived = (
             f"triangles={res.triangles};cpu_s={t_cpu.s:.3f};wo_pim_s={t_wo.s:.3f};"
-            f"tcim_model_s={tcim_s:.4f};pallas_total_s={t_pl.s:.3f};"
+            f"tcim_model_s={tcim_s:.4f};fused_s={t_fused.s:.3f};"
+            f"unfused_s={t_unf.s:.3f};exec_fused_s={exec_f:.4f};"
+            f"exec_unfused_s={exec_u:.4f};hbm_fused={hbm_f};hbm_unfused={hbm_u};"
             f"speedup_cpu_over_tcim={t_cpu.s / max(tcim_s, 1e-12):.1f};"
             f"paper_cpu={paper[0]};paper_gpu={paper[1]};paper_fpga={paper[2]};"
             f"paper_wo_pim={paper[3]};paper_tcim={paper[4]}"
@@ -55,7 +70,12 @@ def run() -> list[dict]:
                 "wo_pim_s": t_wo.s,
                 "tcim_model_s": tcim_s,
                 "tcim_model_j": tcim_j,
-                "pallas_s": t_pl.s,
+                "fused_s": t_fused.s,
+                "unfused_s": t_unf.s,
+                "exec_fused_s": exec_f,
+                "exec_unfused_s": exec_u,
+                "hbm_fused_bytes": hbm_f,
+                "hbm_unfused_bytes": hbm_u,
                 "paper": paper,
             }
         )

@@ -3,10 +3,12 @@
 Public API:
     tcim_count / tcim_count_graph   end-to-end bitwise triangle counting
     build_sbf / build_worklist      sparsity-aware compression + scheduling
+    Executor                        device-resident fused execute stage
     simulate_lru                    data reuse/exchange behavioral model
     tcim_latency_energy             MRAM latency/energy analytical model
 """
 from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
+from repro.core.executor import EXECUTOR_MODES, Executor
 from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
 from repro.core.tcim import BACKENDS, TCResult, tcim_count, tcim_count_graph
 from repro.core.cachesim import CacheStats, simulate_lru
@@ -26,6 +28,8 @@ __all__ = [
     "build_sbf",
     "build_worklist",
     "sbf_stats",
+    "Executor",
+    "EXECUTOR_MODES",
     "BACKENDS",
     "TCResult",
     "tcim_count",

@@ -1,0 +1,194 @@
+"""Executor — the schedulable execute-stage unit of the TCIM engine.
+
+Replaces the old ``_execute_worklist`` loop, which had three hot-path sins:
+
+  1. every chunk materialized gathered ``[P, W]`` operands in HBM (two HBM
+     crossings per gathered word),
+  2. every chunk blocked on a host ``int()`` sync before the next could be
+     dispatched (no overlap, one round-trip per chunk),
+  3. the ragged last chunk had a fresh shape, forcing an XLA retrace per
+     distinct work-list size.
+
+The Executor fixes all three:
+
+  * **Fused execute.** Chunks run through ``ops.popcount_and_gather_total``
+    (kernels/tc_gather_popcount.py): the slice stores are uploaded once and
+    stay device-resident; only index arrays travel per chunk, and the gather
+    happens inside the fused computation.
+  * **Power-of-two chunk buckets.** Chunks are always a power-of-two number
+    of pairs (ragged tails padded with the ``-1`` no-op sentinel), so an
+    executor traces at most ``log2(chunk_pairs)`` distinct shapes over its
+    lifetime — in the common case exactly two (full chunk + one tail
+    bucket), and re-counts are pure cache hits. ``trace_count`` exposes the
+    jit cache size for regression tests.
+  * **Device-resident accumulation.** Each chunk adds into an int32 device
+    accumulator carried across chunks; the only host transfer is the final
+    scalar read. When the worst-case count ``num_pairs * slice_bits`` could
+    overflow int32, the executor instead keeps the per-chunk totals on
+    device and does one stacked transfer at the end, summing exactly in
+    Python ints — still a single sync.
+  * **Donated buffers.** On accelerator backends the per-chunk index buffers
+    and the carried accumulator are donated to XLA (dead after each step);
+    CPU does not support donation, so it is skipped there to avoid warnings.
+
+Execution modes (the engine maps user-facing backends onto these):
+
+    'fused'               gather inside the kernel (default; TCIM semantics)
+    'gather_then_kernel'  legacy XLA-gather + total_pallas (the unfused
+                          baseline benchmarks compare against)
+    'pallas_items'        XLA gather + per-pair items kernel (debuggable)
+    'jnp'                 gather + lax.population_count oracle
+
+Future sharding/batching work should schedule Executors, not raw kernels:
+an Executor is one device's worth of execute-stage state (stores + trace
+cache + accumulator), so multi-store sharding, cross-graph batching and
+async double-buffering all compose at this interface.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sbf as sbf_mod
+from repro.kernels import ops, ref
+from repro.kernels.common import on_cpu
+from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
+
+__all__ = ["Executor", "EXECUTOR_MODES"]
+
+EXECUTOR_MODES = ("fused", "gather_then_kernel", "pallas_items", "jnp")
+
+_INT32_MAX = 2**31 - 1
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_step_fn(mode: str, interpret: bool | None, use_kernel: bool | None, donate: bool):
+    """Module-level jitted chunk step, shared by every Executor with the same
+    config — one-shot API calls (tcim_count per graph) amortize traces and
+    compiles across Executor instances instead of retracing per construction.
+    """
+
+    def chunk_total(row_data, col_data, ridx, cidx):
+        """Per-chunk total (int32 scalar); -1 indices are no-ops."""
+        if mode == "fused":
+            return ops.popcount_and_gather_total(
+                row_data, col_data, ridx, cidx,
+                use_kernel=use_kernel, interpret=interpret,
+            )
+        mask = (ridx >= 0) & (cidx >= 0)
+        rows = jnp.take(row_data, jnp.maximum(ridx, 0), axis=0)
+        cols = jnp.take(col_data, jnp.maximum(cidx, 0), axis=0)
+        # Zeroing one side of the AND suffices: x & 0 == 0.
+        rows = jnp.where(mask[:, None], rows, 0)
+        if mode == "gather_then_kernel":
+            return ops.popcount_and_total(rows, cols, interpret=interpret)
+        if mode == "pallas_items":
+            return ops.popcount_and_items(rows, cols, interpret=interpret).sum(
+                dtype=jnp.int32
+            )
+        return ref.ref_popcount_and_total(rows, cols)  # 'jnp' oracle path
+
+    def step(row_data, col_data, ridx, cidx, acc):
+        return acc + chunk_total(row_data, col_data, ridx, cidx)
+
+    return jax.jit(step, donate_argnums=(2, 3, 4) if donate else ())
+
+
+class Executor:
+    """Device-resident execute stage for one pair of SBF slice stores.
+
+    Upload the stores once, then ``count(worklist)`` (or the lower-level
+    ``execute_indices``) any number of times; chunk shapes are bucketed so
+    repeated counts never retrace.
+    """
+
+    def __init__(
+        self,
+        sb: sbf_mod.SlicedBitmap,
+        *,
+        mode: str = "fused",
+        chunk_pairs: int = 1 << 20,
+        interpret: bool | None = None,
+        use_kernel: bool | None = None,
+    ):
+        if mode not in EXECUTOR_MODES:
+            raise ValueError(f"mode {mode!r} not in {EXECUTOR_MODES}")
+        if chunk_pairs < 1:
+            raise ValueError(f"chunk_pairs must be >= 1, got {chunk_pairs}")
+        self.mode = mode
+        self.words_per_slice = int(sb.row_slice_data.shape[1])
+        self.slice_bits = int(sb.slice_bits)
+        # Round the chunk DOWN to a power of two (never exceed the caller's
+        # memory bound), then clamp so one chunk's worst case provably fits
+        # the int32 accumulator: chunk_pairs * words_per_slice * 32 <= 2**31-1.
+        safe = ops.INT32_SAFE_WORDS // max(self.words_per_slice, 1)
+        safe_pow2 = 1 << (safe.bit_length() - 1)  # largest pow2 <= safe
+        self.chunk_pairs = min(1 << (chunk_pairs.bit_length() - 1), safe_pow2)
+        # Stores go to the device once and stay resident across counts.
+        self.row_data = jnp.asarray(sb.row_slice_data)
+        self.col_data = jnp.asarray(sb.col_slice_data)
+        # CPU ignores donation (and warns about it); donate elsewhere.
+        self._chunk_jit = _chunk_step_fn(
+            mode, interpret, use_kernel, donate=not on_cpu()
+        )
+
+    # ---------------------------------------------------------------- public
+
+    @property
+    def trace_count(self) -> int:
+        """Chunk shapes traced by this executor's (config-shared) jitted step.
+
+        Shared across Executors with identical config, so regression tests
+        should assert on deltas around a count, not absolute values.
+        """
+        return int(self._chunk_jit._cache_size())
+
+    def _chunks(self, row_idx: np.ndarray, col_idx: np.ndarray):
+        """Yield (ridx, cidx) int32 device-ready chunks in pow2 buckets."""
+        p = len(row_idx)
+        c = self.chunk_pairs
+        for start in range(0, p, c):
+            r = np.asarray(row_idx[start : start + c], dtype=np.int32)
+            cc = np.asarray(col_idx[start : start + c], dtype=np.int32)
+            bucket = _pow2_ceil(len(r))
+            if bucket != len(r):  # ragged tail -> pad to its pow2 bucket
+                pad = bucket - len(r)
+                r = np.concatenate([r, np.full(pad, -1, np.int32)])
+                cc = np.concatenate([cc, np.full(pad, -1, np.int32)])
+            yield jnp.asarray(r), jnp.asarray(cc)
+
+    def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
+        """Count over explicit work-list index arrays. One host sync total."""
+        p = len(row_idx)
+        if p == 0:
+            return 0
+        # Worst case: every bit of every referenced slice set.
+        if p * self.slice_bits <= _INT32_MAX:
+            acc = jnp.int32(0)
+            for ridx, cidx in self._chunks(row_idx, col_idx):
+                acc = self._chunk_jit(self.row_data, self.col_data, ridx, cidx, acc)
+            return int(acc)  # the single host transfer
+        # Huge work lists: int32 carry could overflow across chunks; keep
+        # per-chunk totals device-side, one stacked transfer, exact host sum.
+        totals = [
+            self._chunk_jit(self.row_data, self.col_data, ridx, cidx, jnp.int32(0))
+            for ridx, cidx in self._chunks(row_idx, col_idx)
+        ]
+        return sum(int(t) for t in np.asarray(jnp.stack(totals)))
+
+    def count(self, wl: sbf_mod.Worklist) -> int:
+        """Triangle contribution of a work list (Eq. 5 execute+reduce)."""
+        return self.execute_indices(wl.pair_row_pos, wl.pair_col_pos)
+
+    def modeled_hbm_bytes(self, num_pairs: int, *, fused: bool | None = None) -> int:
+        """Modeled execute-stage HBM traffic for this store's word width."""
+        if fused is None:
+            fused = self.mode == "fused"
+        return modeled_hbm_bytes(num_pairs, self.words_per_slice, fused=fused)

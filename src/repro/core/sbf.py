@@ -79,7 +79,7 @@ def _build_side(
     order = np.argsort(key, kind="stable")
     key_s = key[order]
     second_s = second[order]
-    uniq, inv_start = np.unique(key_s, return_index=True)
+    uniq = np.unique(key_s)
     # Map every edge to its valid-slice record.
     vs_of_edge = np.searchsorted(uniq, key_s)
     data = np.zeros((len(uniq), wps), dtype=np.uint32)
@@ -93,7 +93,6 @@ def _build_side(
     owner = (uniq // n_slices).astype(np.int64)
     ptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(np.bincount(owner, minlength=n), out=ptr[1:])
-    del inv_start
     return ptr, slice_idx, data
 
 

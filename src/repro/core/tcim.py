@@ -6,15 +6,19 @@ Pipeline stages (each independently testable):
     orient      edges -> upper-triangular CSR (optional degree relabelling)
     compress    SBF: valid slices only (paper §IV-B)
     schedule    work list of valid slice pairs (the 0.01% that matter)
-    execute     gather slice words + AND/BitCount kernel, chunked
-    reduce      host-side int accumulation (exact, overflow-free)
+    execute     core.executor.Executor — device-resident stores, fused
+                gather–AND–popcount, pow2 chunk buckets, one host sync
+    reduce      the executor's single exact scalar readback
 
-Backends for the execute stage:
-    'pallas_total'  fused Pallas reduction kernel (default; the TCIM device)
-    'pallas_items'  per-pair Pallas kernel (debuggable)
-    'jnp'           pure-jnp oracle path (lax.population_count)
-    'bitgemm'       blocked popcount-GEMM over the dense bitpacked matrix
-    'mxu'           beyond-paper masked A @ A on the MXU (dense, small n)
+Backends for the execute stage (mapped onto Executor modes):
+    'pallas_total'   fused gather–AND–popcount executor (default; the TCIM
+                     device — indices travel, slice stores stay put)
+    'pallas_unfused' legacy XLA-gather + reduction kernel (the unfused
+                     baseline benchmarks compare the fused path against)
+    'pallas_items'   per-pair Pallas kernel (debuggable)
+    'jnp'            pure-jnp oracle path (lax.population_count)
+    'bitgemm'        blocked popcount-GEMM over the dense bitpacked matrix
+    'mxu'            beyond-paper masked A @ A on the MXU (dense, small n)
 """
 from __future__ import annotations
 
@@ -26,12 +30,21 @@ import numpy as np
 
 from repro.core import sbf as sbf_mod
 from repro.core.bitmat import bitpack_matrix
+from repro.core.executor import Executor
 from repro.graphs.csr import Graph, build_graph
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 __all__ = ["TCResult", "tcim_count", "tcim_count_graph", "BACKENDS"]
 
-BACKENDS = ("pallas_total", "pallas_items", "jnp", "bitgemm", "mxu")
+BACKENDS = ("pallas_total", "pallas_unfused", "pallas_items", "jnp", "bitgemm", "mxu")
+
+# User-facing backend -> Executor mode for the work-list execute stage.
+_EXECUTOR_MODE = {
+    "pallas_total": "fused",
+    "pallas_unfused": "gather_then_kernel",
+    "pallas_items": "pallas_items",
+    "jnp": "jnp",
+}
 
 
 @dataclasses.dataclass
@@ -52,28 +65,14 @@ def _execute_worklist(
     backend: str,
     chunk_pairs: int,
 ) -> int:
-    """Gather slice-pair words and run the AND+BitCount backend, chunked.
+    """Run the execute stage through a (fresh) Executor.
 
-    Chunking bounds device memory and lets the int32 kernel accumulators stay
-    far from overflow (host accumulates exact Python ints).
+    Long-lived callers (benchmarks, services) should construct the Executor
+    themselves and reuse it across counts to amortize the store upload and
+    chunk-shape traces; this helper keeps the one-shot API.
     """
-    total = 0
-    row_data = jnp.asarray(sb.row_slice_data)
-    col_data = jnp.asarray(sb.col_slice_data)
-    for start in range(0, wl.num_pairs, chunk_pairs):
-        rp = wl.pair_row_pos[start : start + chunk_pairs]
-        cp = wl.pair_col_pos[start : start + chunk_pairs]
-        rows = jnp.take(row_data, jnp.asarray(rp), axis=0)
-        cols = jnp.take(col_data, jnp.asarray(cp), axis=0)
-        if backend == "pallas_total":
-            total += int(ops.popcount_and_total(rows, cols))
-        elif backend == "pallas_items":
-            total += int(ops.popcount_and_items(rows, cols).sum())
-        elif backend == "jnp":
-            total += int(ref.ref_popcount_and_total(rows, cols))
-        else:  # pragma: no cover - guarded by caller
-            raise ValueError(backend)
-    return total
+    ex = Executor(sb, mode=_EXECUTOR_MODE[backend], chunk_pairs=chunk_pairs)
+    return ex.count(wl)
 
 
 def _execute_bitgemm(g: Graph, chunk_rows: int = 2048) -> int:

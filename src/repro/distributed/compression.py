@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean", "ef_update"]
 
@@ -72,6 +73,6 @@ def compressed_psum_mean(stacked_grads, mesh, axis: str):
     spec = jax.tree.map(
         lambda leaf: P(axis, *([None] * (leaf.ndim - 1))), stacked_grads
     )
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh, in_specs=(spec,), out_specs=spec
     )(stacked_grads)

@@ -18,14 +18,15 @@ Slice data placement:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sbf import SlicedBitmap, Worklist
+from repro.kernels.ops import INT32_SAFE_WORDS
+from repro.kernels.tc_gather_popcount import gather_total_reference
 
 __all__ = ["shard_worklist", "distributed_tc_count", "make_tc_step"]
 
@@ -50,15 +51,13 @@ def shard_worklist(wl: Worklist, num_shards: int) -> tuple[np.ndarray, np.ndarra
 
 
 def _local_count(row_data, col_data, row_idx, col_idx):
-    """Per-device partial count (pure jnp; portable inside shard_map)."""
-    mask = row_idx >= 0
-    safe_r = jnp.maximum(row_idx, 0)
-    safe_c = jnp.maximum(col_idx, 0)
-    rows = jnp.take(row_data, safe_r, axis=0)
-    cols = jnp.take(col_data, safe_c, axis=0)
-    pc = jax.lax.population_count(jnp.bitwise_and(rows, cols))
-    per_pair = pc.astype(jnp.int32).sum(axis=-1)
-    return jnp.where(mask, per_pair, 0).sum()
+    """Per-device partial count: the executor's fused mirror (portable jnp).
+
+    Shares ``gather_total_reference`` with core.executor — identical
+    negative-index no-op contract, so ``shard_worklist`` padding composes
+    with the fused execute semantics for free.
+    """
+    return gather_total_reference(row_data, col_data, row_idx, col_idx)
 
 
 def make_tc_step(mesh: Mesh, axis_names: tuple[str, ...]):
@@ -76,7 +75,7 @@ def make_tc_step(mesh: Mesh, axis_names: tuple[str, ...]):
             partial = _local_count(row_data, col_data, r, c)
             return jax.lax.psum(partial[None], axis_names)
 
-        return jax.shard_map(
+        return shard_map(
             local,
             mesh=mesh,
             in_specs=(P(), P(), flat, flat),
@@ -100,20 +99,40 @@ def distributed_tc_count(
     wl: Worklist,
     mesh: Mesh,
 ) -> int:
-    """Execute the distributed count on an actual mesh (test/production path)."""
+    """Execute the distributed count on an actual mesh (test/production path).
+
+    Per-shard partials AND their psum accumulate in int32 (x64 is off), so
+    the work list is split into stripes whose worst-case count provably fits
+    int32 — one step per stripe, per-stripe totals summed exactly on the
+    host (the distributed analogue of core.executor's escape hatch). Work
+    lists under the bound take exactly one step, as before.
+    """
     axis_names = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
-    row_idx, col_idx = shard_worklist(wl, n_dev)
     step = make_tc_step(mesh, axis_names)
-    total = step(
-        jnp.asarray(sbf.row_slice_data),
-        jnp.asarray(sbf.col_slice_data),
-        jnp.asarray(row_idx.reshape(-1)),
-        jnp.asarray(col_idx.reshape(-1)),
+    row_store = jnp.asarray(sbf.row_slice_data)
+    col_store = jnp.asarray(sbf.col_slice_data)
+    max_pairs = max(INT32_SAFE_WORDS // max(sbf.words_per_slice, 1), 1)
+    total = 0
+    for start in range(0, max(wl.num_pairs, 1), max_pairs):
+        sub = _slice_worklist(wl, start, start + max_pairs)
+        row_idx, col_idx = shard_worklist(sub, n_dev)
+        total += int(
+            step(
+                row_store,
+                col_store,
+                jnp.asarray(row_idx.reshape(-1)),
+                jnp.asarray(col_idx.reshape(-1)),
+            )
+        )
+    return total
+
+
+def _slice_worklist(wl: Worklist, start: int, stop: int) -> Worklist:
+    return Worklist(
+        pair_edge=wl.pair_edge[start:stop],
+        pair_row_pos=wl.pair_row_pos[start:stop],
+        pair_col_pos=wl.pair_col_pos[start:stop],
+        m_edges=wl.m_edges,
+        n_slices=wl.n_slices,
     )
-    return int(total)
-
-
-@functools.lru_cache(maxsize=8)
-def _pair_spec(axis_names: tuple[str, ...]) -> P:
-    return P(axis_names)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["swar_popcount_u32", "on_cpu"]
+__all__ = ["swar_popcount_u32", "on_cpu", "on_tpu"]
 
 
 def swar_popcount_u32(x: jax.Array) -> jax.Array:
@@ -31,3 +31,8 @@ def swar_popcount_u32(x: jax.Array) -> jax.Array:
 def on_cpu() -> bool:
     """True when running on the CPU backend (Pallas requires interpret mode)."""
     return jax.default_backend() == "cpu"
+
+
+def on_tpu() -> bool:
+    """True on real TPUs — gates pltpu-specific features (scalar prefetch)."""
+    return jax.default_backend() == "tpu"

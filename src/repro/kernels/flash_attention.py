@@ -37,14 +37,16 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref, *, block_k, causal, 
 
     def body(i, state):
         m, l, acc = state
-        k = pl.load(k_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        # NB: all-slice index tuples — a bare int leading index breaks
+        # interpret-mode discharge on this jax version.
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(i * block_k, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(i * block_k, block_k), slice(None)))[0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # [block_q, block_k]
         if causal:
             qp = qpos_ref[0]  # [block_q]
-            kp = pl.load(kpos_ref, (0, pl.ds(i * block_k, block_k)))
+            kp = pl.load(kpos_ref, (pl.ds(0, 1), pl.ds(i * block_k, block_k)))[0]
             s = jnp.where(qp[:, None] >= kp[None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=1))
         alpha = jnp.exp(m - m_new)

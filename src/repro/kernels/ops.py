@@ -10,12 +10,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import on_cpu
+from repro.kernels.common import on_cpu, on_tpu
 from repro.kernels.slice_and_popcount import items_pallas, total_pallas
 from repro.kernels.tc_bitgemm import bitgemm_pallas
 from repro.kernels.tc_dense_mxu import dense_mxu_tc_pallas
+from repro.kernels.tc_gather_popcount import (
+    gather_total_pallas,
+    gather_total_reference,
+)
 
-__all__ = ["popcount_and_items", "popcount_and_total", "bitgemm", "dense_mxu_tc"]
+__all__ = [
+    "popcount_and_items",
+    "popcount_and_total",
+    "popcount_and_gather_total",
+    "bitgemm",
+    "dense_mxu_tc",
+    "INT32_SAFE_WORDS",
+]
+
+# Largest number of uint32 words whose AND-popcount total provably fits the
+# kernels' int32 accumulator: each word contributes at most 32 to the sum.
+INT32_SAFE_WORDS = (2**31 - 1) // 32
 
 
 def _interpret(flag: bool | None) -> bool:
@@ -59,16 +74,29 @@ def popcount_and_total(
     lanes: int = 1024,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused scalar total of popcount(rows & cols) over all pairs.
+    """Fused scalar int32 total of popcount(rows & cols) over all pairs.
 
     Flattens [P, W] word streams into zero-padded (T, lanes) blocks — zero
     words contribute nothing, so padding is free — then runs the fused
     reduction kernel (one HBM pass, no per-item materialization).
+
+    The kernel accumulates in int32, so a single call is only safe when the
+    worst-case count ``total_words * 32`` (i.e. ``chunk_pairs *
+    words_per_slice * 32`` for the executor's chunks) fits int32; the guard
+    below enforces it. Callers chunk larger streams and accumulate the
+    per-chunk int32 totals exactly (host Python ints or a checked device
+    accumulator — see core/executor.py).
     """
     assert rows.shape == cols.shape, (rows.shape, cols.shape)
     total_words = int(np.prod(rows.shape))
     if total_words == 0:
-        return jnp.int64(0)
+        return jnp.int32(0)
+    if total_words > INT32_SAFE_WORDS:
+        raise ValueError(
+            f"{total_words} words could overflow the int32 accumulator "
+            f"(max safe: {INT32_SAFE_WORDS} = (2**31-1)//32); "
+            "chunk the stream and accumulate per-chunk totals"
+        )
     r = rows.reshape(-1)
     c = cols.reshape(-1)
     tile = block_rows * lanes
@@ -81,6 +109,52 @@ def popcount_and_total(
     return total_pallas(
         r, c, block_rows=block_rows, lanes=lanes, interpret=_interpret(interpret)
     )
+
+
+def popcount_and_gather_total(
+    row_data: jax.Array,
+    col_data: jax.Array,
+    row_idx: jax.Array,
+    col_idx: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather–AND–popcount total over a work-list chunk -> int32 scalar.
+
+    The TCIM execute primitive: slice stores stay resident, the index arrays
+    select the valid slice pairs, and the gather happens inside the fused
+    computation — no ``[P, W]`` gathered operands ever materialize in HBM.
+    Negative indices are exact no-ops (the chunk-padding/sharding sentinel).
+
+    ``use_kernel=None`` picks the scalar-prefetch Pallas kernel on TPU only
+    (``PrefetchScalarGridSpec`` is a pltpu feature) and the vectorized jnp
+    mirror elsewhere — on CPU the per-pair interpreter grid is a correctness
+    tool rather than a performance path, and on GPU XLA fuses the mirror
+    (both paths share semantics and are cross-checked in tests).
+    """
+    assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
+    p = row_idx.shape[0]
+    w = row_data.shape[1]
+    if p == 0:
+        return jnp.int32(0)
+    if p * w > INT32_SAFE_WORDS:
+        raise ValueError(
+            f"chunk of {p} pairs x {w} words could overflow the int32 "
+            f"accumulator (max safe words: {INT32_SAFE_WORDS}); "
+            "reduce chunk_pairs"
+        )
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return gather_total_pallas(
+            row_data,
+            col_data,
+            row_idx.astype(jnp.int32),
+            col_idx.astype(jnp.int32),
+            interpret=_interpret(interpret),
+        )
+    return gather_total_reference(row_data, col_data, row_idx, col_idx)
 
 
 def bitgemm(

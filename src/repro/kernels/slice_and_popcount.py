@@ -12,7 +12,11 @@ on the VPU. Two variants:
 
 Both consume *gathered* operands (XLA gathers the slice words by work-list
 index before the call) — the gather is the HBM-bandwidth term the roofline
-analysis tracks, the kernel itself is the in-VMEM compute.
+analysis tracks, the kernel itself is the in-VMEM compute. That double HBM
+crossing is why the execute stage now defaults to the fused
+gather–AND–popcount kernel in ``tc_gather_popcount.py`` (indices travel,
+operands stay put); these kernels remain the unfused comparison baseline
+(``Executor(mode="gather_then_kernel")``) and generic popcount primitives.
 """
 from __future__ import annotations
 
@@ -91,10 +95,13 @@ def total_pallas(
     lanes: int = 1024,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused total popcount(rows & cols). Inputs: [T, lanes] uint32 -> scalar int64.
+    """Fused total popcount(rows & cols). Inputs: [T, lanes] uint32 -> scalar int32.
 
     The caller flattens the [P, W] gathered words into a (T, lanes) matrix
-    padded with zeros (zero words contribute nothing to the count).
+    padded with zeros (zero words contribute nothing to the count). The
+    accumulator is int32: callers must keep ``T * lanes * 32`` within the
+    int32 bound (ops.popcount_and_total enforces this) and chunk + exactly
+    accumulate anything larger.
     """
     t, l = rows_flat.shape
     assert l == lanes and t % block_rows == 0, (rows_flat.shape, block_rows, lanes)

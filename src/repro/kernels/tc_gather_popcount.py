@@ -1,0 +1,159 @@
+"""Fused gather–AND–popcount: the TCIM execute stage in one HBM pass.
+
+TCIM's core claim (paper §IV-C) is that computing AND+BitCount *where the
+slice words live* removes the bandwidth bottleneck. The legacy execute path
+did the opposite on TPU: XLA gathered the work-list slice pairs into fresh
+``[P, W]`` HBM buffers, then the reduction kernel read them back — every
+gathered word crossed HBM twice, plus a full materialized intermediate.
+
+This module is the device analogue of the MRAM computational array: the
+*indices* travel to the kernel, not the operands.
+
+  * ``gather_total_pallas`` — scalar-prefetch Pallas kernel. The pair index
+    arrays are ``num_scalar_prefetch`` operands of a
+    ``pltpu.PrefetchScalarGridSpec``; they land in SMEM before the grid runs
+    and drive the index maps of ``(1, W)`` BlockSpecs over the slice stores,
+    so Mosaic's pipeline DMAs exactly the valid slice words straight from
+    the HBM-resident stores into VMEM — one pass, no gathered intermediate.
+    Consecutive identical indices reuse the already-resident block (free
+    temporal locality for hot rows, the same effect as TCIM's reuse-aware
+    cache). Negative indices are masked no-ops, which is how the executor
+    and the distributed engine pad ragged chunks.
+
+    CAVEAT (untested on hardware): each grid step moves one (1, W) block —
+    8–32 bytes, far below the native (8, 128) tile — so per-step DMA
+    overhead on a real TPU may dominate despite Mosaic's pipelining, and
+    the fused-vs-unfused comparison has only been measured in interpret
+    mode. Before trusting the kernel path in production, validate on
+    hardware and, if step overhead dominates, batch B pairs per step with
+    an in-kernel DMA loop over the prefetched indices (ROADMAP open item).
+  * ``gather_total_reference`` — vectorized jnp mirror with identical
+    semantics (including the negative-index contract). On the CPU backend
+    (this container) the per-pair interpreter grid is a correctness tool,
+    not a performance path, so the executor runs this mirror instead; XLA
+    fuses gather+AND+popcount+reduce into one loop, which is the same
+    "no materialized operands" property at the XLA level. It deliberately
+    uses the kernels' SWAR popcount so the ``lax.population_count`` oracle
+    in ``kernels/ref.py`` stays an independent check.
+
+Accumulation is int32; callers bound ``num_pairs * words_per_slice * 32``
+against the int32 limit (see ``kernels/ops.py`` and ``core/executor.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import swar_popcount_u32
+
+__all__ = [
+    "gather_total_pallas",
+    "gather_total_reference",
+    "modeled_hbm_bytes",
+]
+
+
+def _gather_total_kernel(ridx_ref, cidx_ref, row_ref, col_ref, out_ref):
+    """One pair per grid step: AND + SWAR popcount of an index-mapped block.
+
+    ``ridx_ref``/``cidx_ref`` are the SMEM scalar-prefetch refs — also
+    readable in the body, which is how padded (negative-index) pairs are
+    turned into exact no-ops without a separate mask operand.
+    """
+    p = pl.program_id(0)
+    valid = (ridx_ref[p] >= 0) & (cidx_ref[p] >= 0)
+    x = row_ref[...] & col_ref[...]
+    partial = jnp.where(valid, swar_popcount_u32(x).sum(), 0)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(p != 0)
+    def _acc():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_total_pallas(
+    row_data: jax.Array,  # [R, W] uint32 — row-side slice store (stays put)
+    col_data: jax.Array,  # [C, W] uint32 — col-side slice store (stays put)
+    row_idx: jax.Array,  # [P] int32 work-list row positions (< 0 = no-op)
+    col_idx: jax.Array,  # [P] int32 work-list col positions (< 0 = no-op)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused total popcount(row_data[row_idx] & col_data[col_idx]) -> int32.
+
+    The gather happens *inside* the kernel: scalar-prefetched indices drive
+    the BlockSpec index maps, so each grid step's DMA pulls one valid slice
+    pair directly from the stores. Negative index pairs contribute zero.
+    """
+    p = row_idx.shape[0]
+    assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
+    assert row_data.ndim == col_data.ndim == 2
+    w = row_data.shape[1]
+    assert col_data.shape[1] == w, (row_data.shape, col_data.shape)
+    if p == 0:
+        return jnp.int32(0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p,),
+        in_specs=[
+            # Clamp so padded (-1) entries still produce a legal DMA; the
+            # kernel body masks their contribution to zero.
+            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ri[i], 0), 0)),
+            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ci[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, ri, ci: (0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_total_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(row_idx, col_idx, row_data, col_data)
+    return out[0, 0]
+
+
+def gather_total_reference(
+    row_data: jax.Array,
+    col_data: jax.Array,
+    row_idx: jax.Array,
+    col_idx: jax.Array,
+) -> jax.Array:
+    """Vectorized mirror of ``gather_total_pallas`` (same no-op contract).
+
+    Pure jnp, so it is portable inside jit/shard_map and is the executor's
+    CPU path. Uses the SWAR popcount (not ``lax.population_count``) so the
+    ref.py oracle remains algorithm-independent evidence of correctness.
+    """
+    if row_idx.shape[0] == 0:
+        return jnp.int32(0)
+    mask = (row_idx >= 0) & (col_idx >= 0)
+    rows = jnp.take(row_data, jnp.maximum(row_idx, 0), axis=0)
+    cols = jnp.take(col_data, jnp.maximum(col_idx, 0), axis=0)
+    pc = swar_popcount_u32(rows & cols).sum(axis=1)
+    return jnp.where(mask, pc, 0).sum(dtype=jnp.int32)
+
+
+def modeled_hbm_bytes(num_pairs: int, words_per_slice: int, *, fused: bool) -> int:
+    """Analytic HBM traffic of the execute stage for ``num_pairs`` work items.
+
+    fused:    indices in, each gathered slice word crosses HBM exactly once
+              (store -> VMEM), scalar out.
+    unfused:  XLA gather reads the store words *and writes* ``[P, W]``
+              operand buffers, then the reduction kernel reads them back —
+              3x the gathered-word traffic plus the same index traffic.
+    """
+    word_bytes = 4
+    gathered = 2 * num_pairs * words_per_slice * word_bytes  # row + col sides
+    index = 2 * num_pairs * 4
+    out = 4
+    if fused:
+        return gathered + index + out
+    return 3 * gathered + index + out

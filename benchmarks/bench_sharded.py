@@ -1,0 +1,92 @@
+"""Shard-count sweep: replicated vs sharded_cols placement on a CPU mesh.
+
+Forces 8 host devices (must run standalone — the flag only takes effect
+before jax initializes, so this suite is NOT part of benchmarks/run.py):
+
+    PYTHONPATH=src:. python benchmarks/bench_sharded.py
+
+For each bench graph and shard count S in {1, 2, 4, 8} it reports the
+steady-state execute time of
+
+  * ``replicated/S``  — work-list stripes dealt over S devices, both stores
+    on every device (the zero-communication baseline), and
+  * ``sharded/S``     — the column store NamedSharding-sharded into S
+    contiguous row ranges with owner-grouped index stripes (the placement
+    for stores that outgrow one device).
+
+On a CPU mesh the sharded column mostly measures scheduling overhead — the
+point is the *scaling shape* (stripe imbalance, steps, psum count), which is
+what transfers to a real pod. Derived fields carry the planner's stripe
+stats so imbalance is visible next to the time.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from benchmarks.common import bench_graphs, emit  # noqa: E402
+from repro.core import DeviceTopology, plan_execution  # noqa: E402
+from repro.distributed import distributed_tc_count  # noqa: E402
+from repro.distributed.tc import ShardedColsExecutor  # noqa: E402
+
+# The big bench graphs take minutes per shard count through shard_map on
+# CPU; the sweep's subject is scheduling behaviour, so mid-size graphs do.
+SWEEP_GRAPHS = ("ego-facebook", "email-enron", "com-amazon")
+
+
+def _time_host(fn, iters: int = 3) -> float:
+    fn()  # warm (compile + store upload already done by callers)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    devices = jax.devices()
+    for name, cfg, scaled, g, sbf, wl in bench_graphs(SWEEP_GRAPHS):
+        oracle = None
+        for s in (1, 2, 4, 8):
+            if s > len(devices):
+                continue
+            mesh = Mesh(np.asarray(devices[:s]), ("d",))
+            rep = distributed_tc_count(sbf, wl, mesh)
+            if oracle is None:
+                oracle = rep
+            assert rep == oracle, (name, s, rep, oracle)
+            us_rep = _time_host(lambda: distributed_tc_count(sbf, wl, mesh))
+            emit(
+                f"bench_sharded/{name}/replicated/{s}",
+                us_rep,
+                f"pairs={wl.num_pairs};store_bytes={sbf.data_bytes}",
+            )
+            ex = ShardedColsExecutor(sbf, mesh)
+            plan = plan_execution(
+                sbf,
+                wl,
+                DeviceTopology(num_devices=s),
+                placement="sharded_cols",
+                num_shards=s,
+            )
+            sh = ex.count_plan(plan)
+            assert sh == oracle, (name, s, sh, oracle)
+            us_sh = _time_host(lambda: ex.count_plan(plan))
+            emit(
+                f"bench_sharded/{name}/sharded/{s}",
+                us_sh,
+                f"pairs={wl.num_pairs};shard_rows={ex.col_shard_rows};"
+                f"imbalance={plan.imbalance:.2f};"
+                f"rep_over_sharded={us_rep / max(us_sh, 1e-9):.2f}x",
+            )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

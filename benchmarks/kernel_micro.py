@@ -115,20 +115,58 @@ def run() -> None:
         f"fused_speedup={us_u / max(us_f, 1e-9):.2f}x",
     )
 
-    # Execute stage, multi-chunk: Executor pipeline vs per-chunk-sync loop.
+    # Batched kernel: B pairs per grid step (in-kernel DMA loop) vs one pair
+    # per step. Interpret mode — correctness-path timing; on hardware the
+    # batched variant amortizes the per-step DMA overhead (see CAVEAT).
+    pb = 1 << 11
+    ridx_b = jnp.asarray(rng.integers(0, n_rows, pb, dtype=np.int32))
+    cidx_b = jnp.asarray(rng.integers(0, n_rows, pb, dtype=np.int32))
+    from repro.kernels.tc_gather_popcount import gather_total_pallas
+
+    base = int(gather_total_pallas(row_data, col_data, ridx_b, cidx_b, interpret=True))
+    for bp in (1, 8):
+        got_b = int(
+            gather_total_pallas(
+                row_data, col_data, ridx_b, cidx_b, interpret=True, block_pairs=bp
+            )
+        )
+        assert got_b == base, (bp, got_b, base)
+        us_b = _time(
+            lambda rd, cd, r, c, bp=bp: gather_total_pallas(
+                rd, cd, r, c, interpret=True, block_pairs=bp
+            ),
+            row_data, col_data, ridx_b, cidx_b,
+        )
+        emit(
+            f"execute/kernel_block_pairs{bp}_2kpairs",
+            us_b,
+            f"grid_steps={-(-pb // bp)};interpret=1",
+        )
+
+    # Execute stage, multi-chunk: Executor pipeline vs per-chunk-sync loop,
+    # with and without async double-buffering of the index uploads.
     pm = 200_000  # ragged: 3 full 64k chunks + a 3k tail
     chunk = 1 << 16
     rpos = rng.integers(0, n_rows, pm, dtype=np.int64)
     cpos = rng.integers(0, n_rows, pm, dtype=np.int64)
     ex = Executor(sb, chunk_pairs=chunk)
+    ex_serial = Executor(sb, chunk_pairs=chunk, double_buffer=False)
     want = ex.execute_indices(rpos, cpos)  # warm + reference
     got = _legacy_execute(row_data, col_data, rpos, cpos, chunk)
     assert got == want, (got, want)
+    assert ex_serial.execute_indices(rpos, cpos) == want
     us_ex = _time_host(lambda: ex.execute_indices(rpos, cpos), iters=5)
     emit(
         "executor/fused_multichunk_200kpairs",
         us_ex,
-        f"chunks=4;host_syncs=1;hbm={ex.modeled_hbm_bytes(pm)}",
+        f"chunks=4;host_syncs=1;double_buffer=1;hbm={ex.modeled_hbm_bytes(pm)}",
+    )
+    us_ser = _time_host(lambda: ex_serial.execute_indices(rpos, cpos), iters=5)
+    emit(
+        "executor/serial_upload_multichunk_200kpairs",
+        us_ser,
+        f"chunks=4;host_syncs=1;double_buffer=0;"
+        f"buffered_speedup={us_ser / max(us_ex, 1e-9):.2f}x",
     )
     us_old = _time_host(
         lambda: _legacy_execute(row_data, col_data, rpos, cpos, chunk), iters=5

@@ -15,21 +15,33 @@ Columns reproduced:
                  the fused executor removes); the exec_*/hbm_* derived
                  fields put the execute-stage time and modeled HBM traffic
                  of the two side by side.
+  * exec_buffered_s / exec_serial_s — steady-state execute-stage time with
+                 and without async double-buffering (chunk i+1's index
+                 upload overlapping chunk i's kernel).
+  * sharded_s  — replicated-vs-sharded placement: the same count through
+                 ``sharded_cols`` (column store NamedSharding-sharded over a
+                 mesh of every visible device; nshards=1 in a single-device
+                 container — see bench_sharded.py for a real shard sweep).
   * paper_*    — the paper's reported numbers for reference.
 """
 from __future__ import annotations
+
+import jax
 
 from benchmarks.common import bench_graphs, emit, timer
 from repro.core import baselines
 from repro.core.cachesim import simulate_lru
 from repro.core.energymodel import PAPER_TABLE5, tcim_latency_energy
+from repro.core.executor import Executor
 from repro.core.tcim import tcim_count_graph
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
 
-def run() -> list[dict]:
+def run(names=None) -> list[dict]:
     rows = []
-    for name, cfg, scaled, g, sbf, wl in bench_graphs():
+    mesh = jax.make_mesh((len(jax.devices()),), ("d",))
+    nshards = len(jax.devices())
+    for name, cfg, scaled, g, sbf, wl in bench_graphs(names):
         # CPU intersection baseline (measured).
         with timer() as t_cpu:
             tri_cpu = baselines.intersection_tc(g)
@@ -44,8 +56,24 @@ def run() -> list[dict]:
             res_f = tcim_count_graph(g, backend="pallas_total", collect_stats=False)
         with timer() as t_unf:
             res_u = tcim_count_graph(g, backend="pallas_unfused", collect_stats=False)
+        # Buffered vs serial execute (steady state: stores up, traces warm).
+        ex_buf = Executor(sbf, double_buffer=True)
+        ex_ser = Executor(sbf, double_buffer=False)
+        tri_buf = ex_buf.count(wl)  # warm
+        tri_ser = ex_ser.count(wl)
+        with timer() as t_buf:
+            ex_buf.count(wl)
+        with timer() as t_ser:
+            ex_ser.count(wl)
+        # Replicated vs sharded placement through the engine API.
+        with timer() as t_sh:
+            res_s = tcim_count_graph(
+                g, placement="sharded_cols", mesh=mesh, collect_stats=False
+            )
         assert res.triangles == tri_cpu == res_f.triangles == res_u.triangles, (
             name, res.triangles, tri_cpu, res_f.triangles, res_u.triangles)
+        assert res.triangles == tri_buf == tri_ser == res_s.triangles, (
+            name, res.triangles, tri_buf, tri_ser, res_s.triangles)
         wps = sbf.words_per_slice
         hbm_f = modeled_hbm_bytes(wl.num_pairs, wps, fused=True)
         hbm_u = modeled_hbm_bytes(wl.num_pairs, wps, fused=False)
@@ -57,6 +85,8 @@ def run() -> list[dict]:
             f"tcim_model_s={tcim_s:.4f};fused_s={t_fused.s:.3f};"
             f"unfused_s={t_unf.s:.3f};exec_fused_s={exec_f:.4f};"
             f"exec_unfused_s={exec_u:.4f};hbm_fused={hbm_f};hbm_unfused={hbm_u};"
+            f"exec_buffered_s={t_buf.s:.4f};exec_serial_s={t_ser.s:.4f};"
+            f"sharded_s={t_sh.s:.3f};nshards={nshards};"
             f"speedup_cpu_over_tcim={t_cpu.s / max(tcim_s, 1e-12):.1f};"
             f"paper_cpu={paper[0]};paper_gpu={paper[1]};paper_fpga={paper[2]};"
             f"paper_wo_pim={paper[3]};paper_tcim={paper[4]}"
@@ -76,6 +106,10 @@ def run() -> list[dict]:
                 "exec_unfused_s": exec_u,
                 "hbm_fused_bytes": hbm_f,
                 "hbm_unfused_bytes": hbm_u,
+                "exec_buffered_s": t_buf.s,
+                "exec_serial_s": t_ser.s,
+                "sharded_s": t_sh.s,
+                "nshards": nshards,
                 "paper": paper,
             }
         )

@@ -1,8 +1,16 @@
 """Distributed TCIM across a (data, model) device mesh via shard_map.
 
-The work list is dealt across every device; each computes its partial
-AND+BitCount sum; one scalar psum closes it. Forces 8 host devices so the
-demo is genuinely multi-device on CPU (remove the flag on a real pod).
+Two placements of the same count (see core/plan.py):
+
+  * replicated   — both slice stores on every device, work-list stripes
+    dealt across the mesh, one scalar psum closes it.
+  * sharded_cols — the column store genuinely NamedSharding-sharded over
+    the mesh (one contiguous row range per device) with the work list
+    owner-grouped so each pair executes on the shard holding its column
+    slice; only index stripes travel.
+
+Forces 8 host devices so the demo is genuinely multi-device on CPU (remove
+the flag on a real pod).
 
     PYTHONPATH=src python examples/distributed_tc.py
 """
@@ -12,8 +20,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
 
-from repro.core import build_sbf, build_worklist  # noqa: E402
-from repro.distributed import distributed_tc_count  # noqa: E402
+from repro.core import build_sbf, build_worklist, plan_execution, DeviceTopology  # noqa: E402
+from repro.distributed import ShardedColsExecutor, distributed_tc_count  # noqa: E402
 from repro.graphs import build_graph, rmat  # noqa: E402
 from repro.graphs.exact import triangles_intersection  # noqa: E402
 
@@ -24,13 +32,30 @@ def main():
     sbf = build_sbf(g)
     wl = build_worklist(g, sbf)
     mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n_dev = len(jax.devices())
     print(f"graph |V|={g.n} |E|={g.m}; work list: {wl.num_pairs} slice pairs")
-    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"({len(jax.devices())} devices)")
-    got = distributed_tc_count(sbf, wl, mesh)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} ({n_dev} devices)")
+
     want = triangles_intersection(g)
-    print(f"distributed count = {got}; exact = {want}; "
+    got = distributed_tc_count(sbf, wl, mesh)
+    print(f"replicated   count = {got}; exact = {want}; "
           f"{'OK' if got == want else 'MISMATCH'}")
+
+    # The same count with the column store actually sharded over the mesh.
+    plan = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=n_dev),
+        placement="sharded_cols", num_shards=n_dev,
+    )
+    ex = ShardedColsExecutor(sbf, mesh)
+    got_sh = ex.count_plan(plan)
+    stripe_pairs = plan.stats["stripe_pairs"]
+    print(f"sharded_cols count = {got_sh}; "
+          f"{'OK' if got_sh == want else 'MISMATCH'}")
+    print(f"  col store: {ex.col_store.shape} as {ex.col_store.sharding.spec}, "
+          f"{ex.col_shard_rows} rows/shard "
+          f"(replicated? {ex.col_store.sharding.is_fully_replicated})")
+    print(f"  stripes: min={min(stripe_pairs)} max={max(stripe_pairs)} "
+          f"imbalance={plan.imbalance:.2f}")
 
 
 if __name__ == "__main__":

@@ -3,12 +3,21 @@
 Public API:
     tcim_count / tcim_count_graph   end-to-end bitwise triangle counting
     build_sbf / build_worklist      sparsity-aware compression + scheduling
-    Executor                        device-resident fused execute stage
+    plan_execution / ExecutionPlan  placement + owner-grouped work stripes
+    Executor / ExecutorPool         device-resident fused execute stage
     simulate_lru                    data reuse/exchange behavioral model
     tcim_latency_energy             MRAM latency/energy analytical model
 """
 from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
-from repro.core.executor import EXECUTOR_MODES, Executor
+from repro.core.executor import EXECUTOR_MODES, Executor, ExecutorPool
+from repro.core.plan import (
+    PLACEMENTS,
+    DeviceTopology,
+    ExecutionPlan,
+    WorkStripe,
+    clamp_chunk_pairs,
+    plan_execution,
+)
 from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
 from repro.core.tcim import BACKENDS, TCResult, tcim_count, tcim_count_graph
 from repro.core.cachesim import CacheStats, simulate_lru
@@ -29,7 +38,14 @@ __all__ = [
     "build_worklist",
     "sbf_stats",
     "Executor",
+    "ExecutorPool",
     "EXECUTOR_MODES",
+    "PLACEMENTS",
+    "DeviceTopology",
+    "ExecutionPlan",
+    "WorkStripe",
+    "clamp_chunk_pairs",
+    "plan_execution",
     "BACKENDS",
     "TCResult",
     "tcim_count",

@@ -21,6 +21,13 @@ The Executor fixes all three:
     lifetime — in the common case exactly two (full chunk + one tail
     bucket), and re-counts are pure cache hits. ``trace_count`` exposes the
     jit cache size for regression tests.
+  * **Power-of-two store buckets.** The device-resident slice stores are
+    zero-row-padded to the next power of two (zero slices are exact no-ops:
+    nothing indexes them, and ``popcount(0 & x) == 0``), so the jitted chunk
+    step's trace is keyed by the store's *bucket*, not its exact valid-slice
+    count — two different graphs in the same bucket share every trace. Costs
+    at most 2x transient store memory; ``pad_stores_pow2=False`` opts out
+    for memory-bound single-graph deployments.
   * **Device-resident accumulation.** Each chunk adds into an int32 device
     accumulator carried across chunks; the only host transfer is the final
     scalar read. When the worst-case count ``num_pairs * slice_bits`` could
@@ -30,6 +37,22 @@ The Executor fixes all three:
   * **Donated buffers.** On accelerator backends the per-chunk index buffers
     and the carried accumulator are donated to XLA (dead after each step);
     CPU does not support donation, so it is skipped there to avoid warnings.
+  * **Async double-buffering.** By default the executor stages chunk i+1's
+    index arrays (``jax.device_put``) one chunk ahead of dispatch, so at the
+    moment chunk i's fused step is enqueued the next chunk's host->device
+    staging has already been issued and its transfer can proceed while the
+    kernel runs. On backends where dispatch is fully asynchronous the serial
+    path converges to the same pipeline (nothing in either loop blocks —
+    the one host sync stays at the end), so the flag mostly matters where
+    ``device_put`` staging costs host time; ``double_buffer=False`` keeps
+    the upload-on-demand path for comparison (benchmarks) and as the
+    semantics reference (tests assert bit-identical counts).
+
+``ExecutorPool`` sits above: a fleet serving many graphs gets one pooled
+Executor per graph, grouped by the trace key ``(words_per_slice, chunk
+bucket, mode)``, so counting a second graph with an equal key adds zero new
+traces (the jitted chunk step is shared) and re-counting a recently-seen
+graph reuses its device-resident stores outright.
 
 Execution modes (the engine maps user-facing backends onto these):
 
@@ -46,30 +69,46 @@ async double-buffering all compose at this interface.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sbf as sbf_mod
+from repro.core.plan import clamp_chunk_pairs, pow2_ceil as _pow2_ceil
 from repro.kernels import ops, ref
 from repro.kernels.common import on_cpu
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
-__all__ = ["Executor", "EXECUTOR_MODES"]
+__all__ = ["Executor", "ExecutorPool", "EXECUTOR_MODES"]
 
 EXECUTOR_MODES = ("fused", "gather_then_kernel", "pallas_items", "jnp")
 
 _INT32_MAX = 2**31 - 1
 
 
-def _pow2_ceil(x: int) -> int:
-    return 1 << max(0, (x - 1).bit_length())
+def _pad_rows_pow2(a: np.ndarray) -> np.ndarray:
+    """Zero-pad a store's rows to the next power of two (trace bucketing)."""
+    rows = a.shape[0]
+    bucket = _pow2_ceil(max(rows, 1))
+    if bucket == rows:
+        return a
+    return np.concatenate(
+        [a, np.zeros((bucket - rows,) + a.shape[1:], dtype=a.dtype)]
+    )
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_step_fn(mode: str, interpret: bool | None, use_kernel: bool | None, donate: bool):
+def _chunk_step_fn(
+    mode: str,
+    interpret: bool | None,
+    use_kernel: bool | None,
+    donate: bool,
+    block_pairs: int | None = None,
+):
     """Module-level jitted chunk step, shared by every Executor with the same
     config — one-shot API calls (tcim_count per graph) amortize traces and
     compiles across Executor instances instead of retracing per construction.
@@ -81,6 +120,7 @@ def _chunk_step_fn(mode: str, interpret: bool | None, use_kernel: bool | None, d
             return ops.popcount_and_gather_total(
                 row_data, col_data, ridx, cidx,
                 use_kernel=use_kernel, interpret=interpret,
+                block_pairs=block_pairs,
             )
         mask = (ridx >= 0) & (cidx >= 0)
         rows = jnp.take(row_data, jnp.maximum(ridx, 0), axis=0)
@@ -117,26 +157,34 @@ class Executor:
         chunk_pairs: int = 1 << 20,
         interpret: bool | None = None,
         use_kernel: bool | None = None,
+        block_pairs: int | None = None,
+        double_buffer: bool = True,
+        pad_stores_pow2: bool = True,
     ):
         if mode not in EXECUTOR_MODES:
             raise ValueError(f"mode {mode!r} not in {EXECUTOR_MODES}")
-        if chunk_pairs < 1:
-            raise ValueError(f"chunk_pairs must be >= 1, got {chunk_pairs}")
         self.mode = mode
         self.words_per_slice = int(sb.row_slice_data.shape[1])
         self.slice_bits = int(sb.slice_bits)
+        self.double_buffer = double_buffer
         # Round the chunk DOWN to a power of two (never exceed the caller's
         # memory bound), then clamp so one chunk's worst case provably fits
         # the int32 accumulator: chunk_pairs * words_per_slice * 32 <= 2**31-1.
-        safe = ops.INT32_SAFE_WORDS // max(self.words_per_slice, 1)
-        safe_pow2 = 1 << (safe.bit_length() - 1)  # largest pow2 <= safe
-        self.chunk_pairs = min(1 << (chunk_pairs.bit_length() - 1), safe_pow2)
-        # Stores go to the device once and stay resident across counts.
-        self.row_data = jnp.asarray(sb.row_slice_data)
-        self.col_data = jnp.asarray(sb.col_slice_data)
+        # Raises a clear ValueError when words_per_slice alone busts the bound.
+        self.chunk_pairs = clamp_chunk_pairs(chunk_pairs, self.words_per_slice)
+        # Stores go to the device once and stay resident across counts,
+        # row-bucketed to pow2 so same-bucket graphs share chunk-step traces.
+        row_store = np.asarray(sb.row_slice_data)
+        col_store = np.asarray(sb.col_slice_data)
+        if pad_stores_pow2:
+            row_store = _pad_rows_pow2(row_store)
+            col_store = _pad_rows_pow2(col_store)
+        self.row_data = jnp.asarray(row_store)
+        self.col_data = jnp.asarray(col_store)
         # CPU ignores donation (and warns about it); donate elsewhere.
         self._chunk_jit = _chunk_step_fn(
-            mode, interpret, use_kernel, donate=not on_cpu()
+            mode, interpret, use_kernel, donate=not on_cpu(),
+            block_pairs=block_pairs,
         )
 
     # ---------------------------------------------------------------- public
@@ -146,12 +194,16 @@ class Executor:
         """Chunk shapes traced by this executor's (config-shared) jitted step.
 
         Shared across Executors with identical config, so regression tests
-        should assert on deltas around a count, not absolute values.
+        should assert on deltas around a count, not absolute values. Reads a
+        private jax API; returns -1 (tests skip) if a jax upgrade removes it.
         """
-        return int(self._chunk_jit._cache_size())
+        try:
+            return int(self._chunk_jit._cache_size())
+        except Exception:
+            return -1
 
     def _chunks(self, row_idx: np.ndarray, col_idx: np.ndarray):
-        """Yield (ridx, cidx) int32 device-ready chunks in pow2 buckets."""
+        """Yield host-side (ridx, cidx) int32 chunks in pow2 buckets."""
         p = len(row_idx)
         c = self.chunk_pairs
         for start in range(0, p, c):
@@ -162,7 +214,29 @@ class Executor:
                 pad = bucket - len(r)
                 r = np.concatenate([r, np.full(pad, -1, np.int32)])
                 cc = np.concatenate([cc, np.full(pad, -1, np.int32)])
-            yield jnp.asarray(r), jnp.asarray(cc)
+            yield r, cc
+
+    def _device_chunks(self, row_idx: np.ndarray, col_idx: np.ndarray):
+        """Upload chunks to the device, one ahead of the consumer.
+
+        With double buffering, chunk i+1's pad/convert work and its
+        ``device_put`` staging are issued before chunk i is yielded, so the
+        i+1 transfer is already under way when the consumer dispatches chunk
+        i's fused step. The serial path stages on demand instead. Both yield
+        the same chunk sequence; counts are bit-identical.
+        """
+        if not self.double_buffer:
+            for r, c in self._chunks(row_idx, col_idx):
+                yield jax.device_put(r), jax.device_put(c)
+            return
+        ahead = None
+        for r, c in self._chunks(row_idx, col_idx):
+            cur = (jax.device_put(r), jax.device_put(c))
+            if ahead is not None:
+                yield ahead  # consumer dispatches i while i+1 uploads
+            ahead = cur
+        if ahead is not None:
+            yield ahead
 
     def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
         """Count over explicit work-list index arrays. One host sync total."""
@@ -172,14 +246,14 @@ class Executor:
         # Worst case: every bit of every referenced slice set.
         if p * self.slice_bits <= _INT32_MAX:
             acc = jnp.int32(0)
-            for ridx, cidx in self._chunks(row_idx, col_idx):
+            for ridx, cidx in self._device_chunks(row_idx, col_idx):
                 acc = self._chunk_jit(self.row_data, self.col_data, ridx, cidx, acc)
             return int(acc)  # the single host transfer
         # Huge work lists: int32 carry could overflow across chunks; keep
         # per-chunk totals device-side, one stacked transfer, exact host sum.
         totals = [
             self._chunk_jit(self.row_data, self.col_data, ridx, cidx, jnp.int32(0))
-            for ridx, cidx in self._chunks(row_idx, col_idx)
+            for ridx, cidx in self._device_chunks(row_idx, col_idx)
         ]
         return sum(int(t) for t in np.asarray(jnp.stack(totals)))
 
@@ -192,3 +266,115 @@ class Executor:
         if fused is None:
             fused = self.mode == "fused"
         return modeled_hbm_bytes(num_pairs, self.words_per_slice, fused=fused)
+
+
+def sbf_content_key(sb: sbf_mod.SlicedBitmap) -> str:
+    """Digest of an SBF's store contents (shape + data).
+
+    Pools key entries by *content*, not object identity, so one-shot API
+    calls that rebuild the SBF for the same graph still hit the cached
+    executor (and two identical-content SBFs share one set of device
+    stores). blake2b over the raw store bytes — tens of microseconds per MB,
+    negligible next to a count.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(
+        repr(
+            (
+                sb.slice_bits,
+                sb.row_slice_data.shape,
+                sb.col_slice_data.shape,
+            )
+        ).encode()
+    )
+    h.update(np.ascontiguousarray(sb.row_slice_data).tobytes())
+    h.update(np.ascontiguousarray(sb.col_slice_data).tobytes())
+    return h.hexdigest()
+
+
+class ExecutorPool:
+    """Executors for a fleet serving many graphs, grouped by trace key.
+
+    The pool caches one Executor per graph (LRU-bounded — an evicted graph's
+    device stores are freed) and groups them by the *trace key*
+    ``(words_per_slice, chunk bucket, mode)``: executors sharing a trace key
+    share the module-level jitted chunk step, so admitting a second graph
+    with an equal key adds **zero** new traces — only its store upload. That
+    is the multi-graph analogue of TCIM's slice mapping: the expensive
+    artifact (the compiled array program) is keyed by shape, not by graph.
+
+    Entries are keyed by store *content* (``sbf_content_key``), so repeated
+    counts of the same graph hit even when the caller rebuilds the SBF
+    object each time — the case the one-shot ``tcim_count*`` API produces.
+    """
+
+    def __init__(self, *, max_graphs: int = 16):
+        if max_graphs < 1:
+            raise ValueError(f"max_graphs must be >= 1, got {max_graphs}")
+        self.max_graphs = max_graphs
+        # content key -> (trace_key, Executor); ordered for LRU.
+        self._entries: collections.OrderedDict[tuple, tuple] = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def trace_key(
+        sb: sbf_mod.SlicedBitmap, *, mode: str = "fused", chunk_pairs: int = 1 << 20
+    ) -> tuple:
+        """The (words_per_slice, chunk bucket, mode, store buckets) an
+        Executor traces under — equal keys share every chunk-step trace."""
+        wps = int(sb.words_per_slice)
+        return (
+            wps,
+            clamp_chunk_pairs(chunk_pairs, wps),
+            mode,
+            _pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1)),
+            _pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1)),
+        )
+
+    def get(
+        self,
+        sb: sbf_mod.SlicedBitmap,
+        *,
+        mode: str = "fused",
+        chunk_pairs: int = 1 << 20,
+        **executor_kwargs,
+    ) -> Executor:
+        """The pooled Executor for ``sb`` (uploading its stores on first use)."""
+        key = (
+            sbf_content_key(sb),
+            mode,
+            clamp_chunk_pairs(chunk_pairs, sb.words_per_slice),
+            tuple(sorted(executor_kwargs.items())),  # config never aliases
+        )
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry[1]
+        self.misses += 1
+        ex = Executor(sb, mode=mode, chunk_pairs=chunk_pairs, **executor_kwargs)
+        tkey = self.trace_key(sb, mode=mode, chunk_pairs=chunk_pairs)
+        self._entries[key] = (tkey, ex)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_graphs:
+            self._entries.popitem(last=False)  # evict LRU graph + its stores
+        return ex
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        """Drop every cached graph (frees their device-resident stores)."""
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        """Pool effectiveness: hit rate and trace sharing across graphs."""
+        groups = collections.Counter(tkey for tkey, _ in self._entries.values())
+        return {
+            "graphs": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "trace_groups": len(groups),
+            "max_group": max(groups.values(), default=0),
+        }

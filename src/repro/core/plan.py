@@ -1,0 +1,252 @@
+"""ExecutionPlan — placement-aware scheduling for the TCIM execute stage.
+
+The paper's headline wins come from *where data sits*: slice data stays
+resident in the computational arrays while only indices travel (§IV-C), and
+the slicing/mapping step decides which array owns which slice. This module is
+the software analogue of that mapping step, one level above the Executor:
+given an SBF, a work list, and a device topology it decides
+
+  * **placement** — ``replicated`` (every device holds both slice stores;
+    zero communication beyond the closing psum) vs ``sharded_cols`` (the
+    column store is partitioned into contiguous row ranges, one range per
+    shard, for graphs whose SBF does not fit a single device),
+  * **work partitioning** — for sharded placement the work list is bucketed
+    into *owner-grouped stripes*: every pair goes to the shard that owns its
+    column slice, and its column position is rewritten to be shard-local.
+    A sharded count therefore needs no per-step all-gather of the column
+    store in the common case — each shard reads only its resident rows,
+  * **chunking** — the pow2 chunk bucket all executors run (rounded down to
+    the caller's memory bound and clamped so one chunk's worst-case count
+    provably fits the int32 accumulator).
+
+Consumers: ``core.tcim`` routes ``tcim_count_graph(placement=...)`` through
+``plan_execution``; ``distributed.tc`` turns a ``sharded_cols`` plan into a
+``NamedSharding``-sharded store plus per-shard stripes under ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import sbf as sbf_mod
+from repro.kernels.ops import INT32_SAFE_WORDS
+
+__all__ = [
+    "PLACEMENTS",
+    "DeviceTopology",
+    "WorkStripe",
+    "ExecutionPlan",
+    "plan_execution",
+    "clamp_chunk_pairs",
+    "pow2_ceil",
+    "shard_col_bounds",
+]
+
+
+def pow2_ceil(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1) — the bucket rounding every
+    layer shares (chunk tails, store rows, sharded step lengths)."""
+    return 1 << max(0, (x - 1).bit_length())
+
+# "auto" resolves to one of the other two at planning time.
+PLACEMENTS = ("auto", "replicated", "sharded_cols")
+
+# Default store size above which "auto" prefers sharding when a multi-device
+# topology is available. All SNAP-class graphs (Table III tops out at
+# 16.8 MB) stay replicated; a store this large starts to crowd one device.
+DEFAULT_SHARD_ABOVE_BYTES = 256 << 20
+
+
+def clamp_chunk_pairs(chunk_pairs: int, words_per_slice: int) -> int:
+    """Largest safe pow2 chunk <= the requested chunk.
+
+    Rounded DOWN to a power of two (never exceed the caller's memory bound),
+    then clamped so one chunk's worst case provably fits the int32
+    accumulator: ``chunk_pairs * words_per_slice * 32 <= 2**31 - 1``.
+
+    Raises ``ValueError`` when ``words_per_slice`` alone busts the bound —
+    then even a single pair could overflow int32 and no chunking helps
+    (that is a >2 Gbit slice; shrink ``slice_bits``).
+    """
+    if chunk_pairs < 1:
+        raise ValueError(f"chunk_pairs must be >= 1, got {chunk_pairs}")
+    safe = INT32_SAFE_WORDS // max(words_per_slice, 1)
+    if safe < 1:
+        raise ValueError(
+            f"words_per_slice={words_per_slice} exceeds INT32_SAFE_WORDS="
+            f"{INT32_SAFE_WORDS}: a single slice pair's worst-case popcount "
+            "overflows the int32 accumulator; use a smaller slice_bits"
+        )
+    safe_pow2 = 1 << (safe.bit_length() - 1)  # largest pow2 <= safe
+    return min(1 << (chunk_pairs.bit_length() - 1), safe_pow2)
+
+
+def shard_col_bounds(num_col_slices: int, num_shards: int) -> tuple[int, int]:
+    """(rows_per_shard, padded_rows) for a contiguous column-store split.
+
+    Every shard owns the same number of rows (``NamedSharding`` over dim 0
+    needs equal blocks); the store is zero-padded to ``padded_rows``. Zero
+    rows are harmless: no stripe index ever points at them, and even if one
+    did, popcount(0 & x) == 0.
+    """
+    per = -(-max(num_col_slices, 1) // num_shards)
+    return per, per * num_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTopology:
+    """What the planner knows about the machine (mesh-agnostic)."""
+
+    num_devices: int
+    memory_bytes: int | None = None  # per device; None = unknown
+    platform: str = "cpu"
+
+    @classmethod
+    def detect(cls) -> "DeviceTopology":
+        import jax
+
+        devs = jax.devices()
+        mem = None
+        try:  # memory_stats is backend-optional (absent on CPU)
+            stats = devs[0].memory_stats()
+            if stats:
+                mem = stats.get("bytes_limit")
+        except Exception:
+            mem = None
+        return cls(
+            num_devices=len(devs), memory_bytes=mem, platform=devs[0].platform
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkStripe:
+    """The pairs one column-store shard executes.
+
+    ``col_pos`` is *local* to the owning shard's contiguous row range;
+    ``row_pos`` stays global (the row store is replicated). For a
+    ``replicated`` plan there is exactly one stripe with global coordinates.
+    """
+
+    shard: int
+    row_pos: np.ndarray  # int32 [P_s]
+    col_pos: np.ndarray  # int32 [P_s]
+
+    @property
+    def num_pairs(self) -> int:
+        return int(len(self.row_pos))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    placement: str  # resolved: "replicated" | "sharded_cols"
+    num_shards: int
+    chunk_pairs: int  # pow2, int32-safe
+    words_per_slice: int
+    col_shard_rows: int  # rows per shard after padding (0 when replicated)
+    stripes: tuple[WorkStripe, ...]
+    stats: dict
+
+    @property
+    def total_pairs(self) -> int:
+        return sum(s.num_pairs for s in self.stripes)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean stripe length — 1.0 is a perfectly balanced sharding."""
+        sizes = [s.num_pairs for s in self.stripes]
+        mean = sum(sizes) / max(len(sizes), 1)
+        return max(sizes) / mean if mean else 1.0
+
+
+def _resolve_placement(
+    placement: str,
+    sb: sbf_mod.SlicedBitmap,
+    topo: DeviceTopology,
+    shard_above_bytes: int,
+) -> str:
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement {placement!r} not in {PLACEMENTS}")
+    if placement != "auto":
+        return placement
+    if topo.num_devices <= 1:
+        return "replicated"
+    # Shard when the store crowds one device: above the static threshold, or
+    # above half the known per-device memory.
+    threshold = shard_above_bytes
+    if topo.memory_bytes:
+        threshold = min(threshold, topo.memory_bytes // 2)
+    return "sharded_cols" if sb.data_bytes > threshold else "replicated"
+
+
+def plan_execution(
+    sb: sbf_mod.SlicedBitmap,
+    wl: sbf_mod.Worklist,
+    topo: DeviceTopology | None = None,
+    *,
+    placement: str = "auto",
+    chunk_pairs: int = 1 << 20,
+    num_shards: int | None = None,
+    shard_above_bytes: int = DEFAULT_SHARD_ABOVE_BYTES,
+) -> ExecutionPlan:
+    """Choose placement, owner-group the work list, and pick chunk buckets.
+
+    ``num_shards`` defaults to the topology's device count for sharded
+    placement; pass it explicitly to plan for a sub-mesh.
+    """
+    topo = topo or DeviceTopology.detect()
+    wps = int(sb.words_per_slice)
+    chunk = clamp_chunk_pairs(chunk_pairs, wps)
+    resolved = _resolve_placement(placement, sb, topo, shard_above_bytes)
+
+    row_pos = np.asarray(wl.pair_row_pos, dtype=np.int32)
+    col_pos = np.asarray(wl.pair_col_pos, dtype=np.int32)
+
+    if resolved == "replicated":
+        stripes = (WorkStripe(shard=0, row_pos=row_pos, col_pos=col_pos),)
+        return ExecutionPlan(
+            placement=resolved,
+            num_shards=1,
+            chunk_pairs=chunk,
+            words_per_slice=wps,
+            col_shard_rows=0,
+            stripes=stripes,
+            stats={
+                "store_bytes": sb.data_bytes,
+                "num_pairs": wl.num_pairs,
+                "reason": "single stripe; stores replicated",
+            },
+        )
+
+    shards = int(num_shards or topo.num_devices)
+    if shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {shards}")
+    per, _padded = shard_col_bounds(len(sb.col_slice_idx), shards)
+    owner = col_pos // per  # contiguous ranges -> owner is a division
+    stripes = []
+    for s in range(shards):
+        sel = owner == s
+        stripes.append(
+            WorkStripe(
+                shard=s,
+                row_pos=row_pos[sel],
+                col_pos=col_pos[sel] - s * per,  # shard-local coordinates
+            )
+        )
+    plan = ExecutionPlan(
+        placement=resolved,
+        num_shards=shards,
+        chunk_pairs=chunk,
+        words_per_slice=wps,
+        col_shard_rows=per,
+        stripes=tuple(stripes),
+        stats={
+            "store_bytes": sb.data_bytes,
+            "num_pairs": wl.num_pairs,
+            "stripe_pairs": [s.num_pairs for s in stripes],
+            "reason": "col store sharded into contiguous row ranges; "
+            "pairs owner-grouped so no per-step all-gather",
+        },
+    )
+    assert plan.total_pairs == wl.num_pairs
+    return plan

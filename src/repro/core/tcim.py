@@ -6,9 +6,12 @@ Pipeline stages (each independently testable):
     orient      edges -> upper-triangular CSR (optional degree relabelling)
     compress    SBF: valid slices only (paper §IV-B)
     schedule    work list of valid slice pairs (the 0.01% that matter)
-    execute     core.executor.Executor — device-resident stores, fused
-                gather–AND–popcount, pow2 chunk buckets, one host sync
-    reduce      the executor's single exact scalar readback
+    plan        core.plan.plan_execution — placement (replicated vs
+                sharded_cols), owner-grouped stripes, pow2 chunk buckets
+    execute     core.executor.Executor (replicated; pooled + double-
+                buffered) or distributed.tc.ShardedColsExecutor (column
+                store NamedSharding-sharded over a mesh)
+    reduce      a single exact scalar readback (psum-closed when sharded)
 
 Backends for the execute stage (mapped onto Executor modes):
     'pallas_total'   fused gather–AND–popcount executor (default; the TCIM
@@ -30,11 +33,31 @@ import numpy as np
 
 from repro.core import sbf as sbf_mod
 from repro.core.bitmat import bitpack_matrix
-from repro.core.executor import Executor
+from repro.core.executor import ExecutorPool
+from repro.core.plan import DeviceTopology, plan_execution
 from repro.graphs.csr import Graph, build_graph
 from repro.kernels import ops
 
-__all__ = ["TCResult", "tcim_count", "tcim_count_graph", "BACKENDS"]
+__all__ = [
+    "TCResult",
+    "tcim_count",
+    "tcim_count_graph",
+    "default_executor_pool",
+    "BACKENDS",
+]
+
+# One-shot API calls route through a shared pool keyed by store *content*,
+# so recounting a graph skips the store upload even though each call builds
+# a fresh SBF, and same-bucket graphs share traces. LRU-bounded: up to
+# max_graphs recently-counted graphs keep their (pow2-padded) stores
+# device-resident after the call returns — call default_executor_pool()
+# .clear() to release them, or pass pool= to manage lifetimes yourself.
+_DEFAULT_POOL = ExecutorPool(max_graphs=4)
+
+
+def default_executor_pool() -> ExecutorPool:
+    """The module-level pool behind ``tcim_count*(pool=None)``."""
+    return _DEFAULT_POOL
 
 BACKENDS = ("pallas_total", "pallas_unfused", "pallas_items", "jnp", "bitgemm", "mxu")
 
@@ -64,15 +87,55 @@ def _execute_worklist(
     wl: sbf_mod.Worklist,
     backend: str,
     chunk_pairs: int,
-) -> int:
-    """Run the execute stage through a (fresh) Executor.
+    placement: str,
+    mesh,
+    pool: ExecutorPool | None,
+) -> tuple[int, str]:
+    """Run the execute stage through the planner.
 
-    Long-lived callers (benchmarks, services) should construct the Executor
-    themselves and reuse it across counts to amortize the store upload and
-    chunk-shape traces; this helper keeps the one-shot API.
+    Resolves ``placement`` against the device topology (the mesh's, when
+    given), then executes either on a pooled replicated Executor or on the
+    column-sharded distributed path. Returns (count, resolved placement).
     """
-    ex = Executor(sb, mode=_EXECUTOR_MODE[backend], chunk_pairs=chunk_pairs)
-    return ex.count(wl)
+    if mesh is not None:
+        topo = DeviceTopology(
+            num_devices=int(np.prod(mesh.devices.shape)),
+            platform=mesh.devices.reshape(-1)[0].platform,
+        )
+    else:
+        # Without a mesh there is nothing to shard over, so "auto" must
+        # resolve to replicated regardless of how many devices exist —
+        # only an *explicit* sharded_cols request errors below.
+        topo = DeviceTopology(num_devices=1)
+    plan = plan_execution(
+        sb, wl, topo, placement=placement, chunk_pairs=chunk_pairs
+    )
+    if plan.placement == "sharded_cols":
+        if mesh is None:
+            raise ValueError(
+                "placement 'sharded_cols' needs a mesh= (jax.sharding.Mesh) "
+                "to shard the column store over"
+            )
+        # Imported here: core stays importable without the distributed layer.
+        from repro.distributed.tc import pooled_sharded_executor
+
+        ex = pooled_sharded_executor(sb, mesh, chunk_pairs=chunk_pairs)
+        return ex.count_plan(plan), plan.placement
+    if mesh is not None and topo.num_devices > 1:
+        # Replicated over a real mesh: stores on every device, work-list
+        # stripes dealt across it, scalar psum close. Runs the fused jnp
+        # mirror inside shard_map, so `backend` does not apply here.
+        from repro.distributed.tc import distributed_tc_count
+
+        return (
+            distributed_tc_count(sb, wl, mesh, max_step_pairs=plan.chunk_pairs),
+            plan.placement,
+        )
+    # NOT `pool or ...`: an empty ExecutorPool is falsy (it has __len__).
+    ex = (pool if pool is not None else _DEFAULT_POOL).get(
+        sb, mode=_EXECUTOR_MODE[backend], chunk_pairs=chunk_pairs
+    )
+    return ex.count(wl), plan.placement
 
 
 def _execute_bitgemm(g: Graph, chunk_rows: int = 2048) -> int:
@@ -101,8 +164,28 @@ def tcim_count_graph(
     backend: str = "pallas_total",
     chunk_pairs: int = 1 << 20,
     collect_stats: bool = True,
+    placement: str = "auto",
+    mesh=None,
+    pool: ExecutorPool | None = None,
 ) -> TCResult:
-    """Count triangles of a prebuilt (oriented) Graph."""
+    """Count triangles of a prebuilt (oriented) Graph.
+
+    ``placement`` routes the execute stage through ``core.plan``:
+    ``'replicated'`` (stores on every device, pooled Executor),
+    ``'sharded_cols'`` (column store NamedSharding-sharded over ``mesh``;
+    requires ``mesh``), or ``'auto'`` (planner decides from store size and
+    topology; single-device stays replicated). Every mesh path (sharded, or
+    replicated with a multi-device mesh — the latter deals work-list stripes
+    across the mesh via ``distributed_tc_count``) runs the fused jnp mirror
+    inside shard_map, so ``backend`` selects the Executor mode only for the
+    single-device replicated path; ``chunk_pairs`` bounds per-step work
+    everywhere. ``pool`` overrides the module-level
+    ExecutorPool for fleets managing their own executor lifetimes (the
+    default pool keeps recent graphs' stores device-resident; see
+    ``default_executor_pool``, and
+    ``repro.distributed.clear_sharded_executor_cache`` for the sharded
+    analogue).
+    """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     timings: dict[str, float] = {}
@@ -125,10 +208,13 @@ def tcim_count_graph(
     timings["schedule"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    count = _execute_worklist(sb, wl, backend, chunk_pairs)
+    count, resolved = _execute_worklist(
+        sb, wl, backend, chunk_pairs, placement, mesh, pool
+    )
     timings["execute"] = time.perf_counter() - t0
 
     stats = sbf_mod.sbf_stats(g, sb, wl) if collect_stats else {"n": g.n, "m": g.m}
+    stats["placement"] = resolved
     return TCResult(count, backend, stats, timings)
 
 
@@ -141,6 +227,9 @@ def tcim_count(
     reorder: bool = True,
     chunk_pairs: int = 1 << 20,
     collect_stats: bool = True,
+    placement: str = "auto",
+    mesh=None,
+    pool: ExecutorPool | None = None,
 ) -> TCResult:
     """End-to-end triangle count from a canonical undirected edge list."""
     t0 = time.perf_counter()
@@ -152,6 +241,9 @@ def tcim_count(
         backend=backend,
         chunk_pairs=chunk_pairs,
         collect_stats=collect_stats,
+        placement=placement,
+        mesh=mesh,
+        pool=pool,
     )
     res.timings_s = {"orient": t_orient, **res.timings_s}
     return res

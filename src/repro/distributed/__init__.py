@@ -1,4 +1,18 @@
 """Distribution layer: sharded TC, LM shardings, gradient compression."""
-from repro.distributed.tc import distributed_tc_count, shard_worklist
+from repro.distributed.tc import (
+    ShardedColsExecutor,
+    TC_PLACEMENTS,
+    clear_sharded_executor_cache,
+    distributed_tc_count,
+    pooled_sharded_executor,
+    shard_worklist,
+)
 
-__all__ = ["distributed_tc_count", "shard_worklist"]
+__all__ = [
+    "ShardedColsExecutor",
+    "TC_PLACEMENTS",
+    "clear_sharded_executor_cache",
+    "distributed_tc_count",
+    "pooled_sharded_executor",
+    "shard_worklist",
+]

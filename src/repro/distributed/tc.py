@@ -8,15 +8,23 @@ also why the engine is elastic- and straggler-friendly (runtime/elastic.py):
 work stripes can be re-dealt to any surviving device set without touching
 the slice data.
 
-Slice data placement:
+Slice data placement (chosen by ``core.plan.plan_execution``):
   * ``replicated``  (default) — row/col slice stores live on every device;
     right for graphs up to a few GB of SBF (all SNAP-class graphs: Table III
     tops out at 16.8 MB) and removes all communication except the final psum.
-  * ``sharded_cols`` — column store sharded over the mesh axis, row stripe
-    all-gathered per step; for graphs whose SBF exceeds one device's HBM.
-    (Lowered and dry-run at 512 devices; see launch/dryrun.py --arch tcim.)
+  * ``sharded_cols`` — the column store is genuinely ``NamedSharding``-
+    sharded over the mesh (contiguous row ranges, dim 0 split across every
+    axis); the row store stays replicated. The planner owner-groups the work
+    list so each pair executes on the shard holding its column slice with
+    *shard-local* indices — no per-step all-gather of column data, only each
+    shard's own index stripe travels, and a single scalar psum still closes
+    every step. ``ShardedColsExecutor`` is the device-resident unit: one
+    Executor's worth of state (store shard + traced step + stripe schedule)
+    per mesh device. For graphs whose SBF exceeds one device's HBM.
 """
 from __future__ import annotations
+
+import collections
 
 import jax
 import jax.numpy as jnp
@@ -24,11 +32,27 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.plan import (
+    ExecutionPlan,
+    plan_execution,
+    pow2_ceil as _pow2_ceil,
+    shard_col_bounds,
+)
 from repro.core.sbf import SlicedBitmap, Worklist
 from repro.kernels.ops import INT32_SAFE_WORDS
 from repro.kernels.tc_gather_popcount import gather_total_reference
 
-__all__ = ["shard_worklist", "distributed_tc_count", "make_tc_step"]
+__all__ = [
+    "shard_worklist",
+    "distributed_tc_count",
+    "make_tc_step",
+    "ShardedColsExecutor",
+    "pooled_sharded_executor",
+    "clear_sharded_executor_cache",
+    "TC_PLACEMENTS",
+]
+
+TC_PLACEMENTS = ("replicated", "sharded_cols")
 
 
 def shard_worklist(wl: Worklist, num_shards: int) -> tuple[np.ndarray, np.ndarray]:
@@ -94,10 +118,187 @@ def make_tc_step(mesh: Mesh, axis_names: tuple[str, ...]):
     )
 
 
+def make_sharded_cols_step(mesh: Mesh, axis_names: tuple[str, ...]):
+    """The pjit'd step for ``sharded_cols`` placement.
+
+    Data layout: row store replicated; column store's dim 0 sharded over
+    every mesh axis (each device holds one contiguous block of column
+    slices); index stripes sharded the same flat way, with *block-local*
+    column positions. Inside shard_map every device runs the fused mirror
+    against only its resident column block — no all-gather — and one scalar
+    psum closes the step.
+    """
+    flat = P(axis_names)
+    col_spec = P(axis_names, None)
+
+    def step(row_data, col_block, row_idx, col_idx):
+        def local(row_data, col_block, r, c):
+            partial = gather_total_reference(row_data, col_block, r, c)
+            return jax.lax.psum(partial[None], axis_names)
+
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), col_spec, flat, flat),
+            out_specs=P(),
+        )(row_data, col_block, row_idx, col_idx)[0]
+
+    return jax.jit(
+        step,
+        in_shardings=(
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, col_spec),
+            NamedSharding(mesh, flat),
+            NamedSharding(mesh, flat),
+        ),
+        out_shardings=NamedSharding(mesh, P()),
+    )
+
+
+class ShardedColsExecutor:
+    """Device-resident ``sharded_cols`` execute stage for one mesh.
+
+    One Executor's worth of state per column-store shard: the shard's block
+    of column slices stays resident on its device (uploaded once, verifiably
+    sharded — see ``col_store.sharding``), the row store is replicated, and
+    the traced step is shared across counts. ``count`` schedules any work
+    list through the planner's owner-grouped stripes; pow2 step buckets keep
+    retraces bounded exactly like ``core.executor.Executor``.
+    """
+
+    def __init__(
+        self,
+        sbf: SlicedBitmap,
+        mesh: Mesh,
+        *,
+        chunk_pairs: int = 1 << 20,
+    ):
+        self.mesh = mesh
+        self.axis_names = tuple(mesh.axis_names)
+        self.num_shards = int(np.prod(mesh.devices.shape))
+        self.words_per_slice = int(sbf.words_per_slice)
+        self.chunk_pairs = chunk_pairs
+        per, padded = shard_col_bounds(len(sbf.col_slice_idx), self.num_shards)
+        self.col_shard_rows = per
+        col = np.asarray(sbf.col_slice_data)
+        if padded != col.shape[0]:
+            col = np.concatenate(
+                [col, np.zeros((padded - col.shape[0], col.shape[1]), col.dtype)]
+            )
+        # The actual sharded placement: dim 0 split over every mesh axis.
+        self.col_store = jax.device_put(
+            col, NamedSharding(mesh, P(self.axis_names, None))
+        )
+        self.row_store = jax.device_put(
+            np.asarray(sbf.row_slice_data), NamedSharding(mesh, P())
+        )
+        self._step = make_sharded_cols_step(mesh, self.axis_names)
+        self._sbf = sbf
+        # Per-step, per-shard pair budget: the closing psum sums num_shards
+        # int32 partials, so the *global* per-step worst case must fit int32.
+        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
+        self.max_pairs_per_shard_step = safe // self.num_shards
+        if self.max_pairs_per_shard_step < 1:
+            raise ValueError(
+                f"words_per_slice={self.words_per_slice} x {self.num_shards} "
+                f"shards cannot give every shard even one int32-safe pair per "
+                f"step (INT32_SAFE_WORDS={INT32_SAFE_WORDS}); use a smaller "
+                "slice_bits or fewer shards"
+            )
+
+    def _plan(self, wl: Worklist) -> ExecutionPlan:
+        return plan_execution(
+            self._sbf,
+            wl,
+            placement="sharded_cols",
+            num_shards=self.num_shards,
+            chunk_pairs=self.chunk_pairs,
+        )
+
+    def count_plan(self, plan: ExecutionPlan) -> int:
+        """Count an owner-grouped plan. One exact host sum at the end."""
+        if plan.num_shards != self.num_shards:
+            raise ValueError(
+                f"plan has {plan.num_shards} shards, mesh has {self.num_shards}"
+            )
+        if plan.col_shard_rows != self.col_shard_rows:
+            raise ValueError(
+                f"plan's shard-local coordinates assume {plan.col_shard_rows} "
+                f"rows/shard but this executor's store has "
+                f"{self.col_shard_rows}; the plan was built for a different "
+                "SBF or shard count"
+            )
+        budget = min(
+            max(plan.chunk_pairs, 1), self.max_pairs_per_shard_step
+        )
+        longest = max((s.num_pairs for s in plan.stripes), default=0)
+        if longest == 0:
+            return 0
+        totals = []
+        for start in range(0, longest, budget):
+            need = min(budget, longest - start)
+            bucket = _pow2_ceil(need)  # ragged tail -> pow2 step bucket
+            ridx = np.full((self.num_shards, bucket), -1, dtype=np.int32)
+            cidx = np.full((self.num_shards, bucket), -1, dtype=np.int32)
+            for s, stripe in enumerate(plan.stripes):
+                part_r = stripe.row_pos[start : start + need]
+                part_c = stripe.col_pos[start : start + need]
+                ridx[s, : len(part_r)] = part_r
+                cidx[s, : len(part_c)] = part_c
+            totals.append(
+                self._step(
+                    self.row_store,
+                    self.col_store,
+                    jnp.asarray(ridx.reshape(-1)),
+                    jnp.asarray(cidx.reshape(-1)),
+                )
+            )
+        return sum(int(t) for t in totals)  # exact: Python ints
+
+    def count(self, wl: Worklist) -> int:
+        """Count a work list against the constructor SBF's sharded stores."""
+        return self.count_plan(self._plan(wl))
+
+
+# Bounded cache of sharded executors for the one-shot APIs, keyed by store
+# *content* (like core.executor.ExecutorPool) so repeated counts of the same
+# graph hit even though tcim_count* rebuilds the SBF object per call —
+# reusing the uploaded shards and the traced step instead of paying both.
+_SHARDED_CACHE: collections.OrderedDict = collections.OrderedDict()
+_SHARDED_CACHE_MAX = 4
+
+
+def pooled_sharded_executor(
+    sbf: SlicedBitmap, mesh: Mesh, *, chunk_pairs: int = 1 << 20
+) -> ShardedColsExecutor:
+    from repro.core.executor import sbf_content_key
+
+    key = (sbf_content_key(sbf), mesh, chunk_pairs)
+    entry = _SHARDED_CACHE.get(key)
+    if entry is not None:
+        _SHARDED_CACHE.move_to_end(key)
+        return entry
+    ex = ShardedColsExecutor(sbf, mesh, chunk_pairs=chunk_pairs)
+    _SHARDED_CACHE[key] = ex
+    _SHARDED_CACHE.move_to_end(key)
+    while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
+        _SHARDED_CACHE.popitem(last=False)
+    return ex
+
+
+def clear_sharded_executor_cache() -> None:
+    """Release every cached sharded executor (frees the NamedSharding-sharded
+    column stores — sharded graphs are exactly the ones big enough to care)."""
+    _SHARDED_CACHE.clear()
+
+
 def distributed_tc_count(
     sbf: SlicedBitmap,
     wl: Worklist,
     mesh: Mesh,
+    *,
+    placement: str = "replicated",
+    max_step_pairs: int | None = None,
 ) -> int:
     """Execute the distributed count on an actual mesh (test/production path).
 
@@ -106,13 +307,30 @@ def distributed_tc_count(
     int32 — one step per stripe, per-stripe totals summed exactly on the
     host (the distributed analogue of core.executor's escape hatch). Work
     lists under the bound take exactly one step, as before.
+
+    ``placement='sharded_cols'`` runs the column-sharded path instead: the
+    column store is NamedSharding-sharded over the mesh and the work list is
+    owner-grouped per shard (see ``ShardedColsExecutor``). Long-lived callers
+    should construct the ShardedColsExecutor themselves and reuse it.
+
+    ``max_step_pairs`` additionally bounds the pairs per psum step below the
+    int32-safety budget (the caller's memory bound, e.g. the engine's
+    ``chunk_pairs``). Both placements run the fused jnp mirror inside
+    shard_map — Executor modes don't apply here.
     """
+    if placement not in TC_PLACEMENTS:
+        raise ValueError(f"placement {placement!r} not in {TC_PLACEMENTS}")
+    if placement == "sharded_cols":
+        chunk = max_step_pairs if max_step_pairs is not None else 1 << 20
+        return pooled_sharded_executor(sbf, mesh, chunk_pairs=chunk).count(wl)
     axis_names = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
     step = make_tc_step(mesh, axis_names)
     row_store = jnp.asarray(sbf.row_slice_data)
     col_store = jnp.asarray(sbf.col_slice_data)
     max_pairs = max(INT32_SAFE_WORDS // max(sbf.words_per_slice, 1), 1)
+    if max_step_pairs is not None:
+        max_pairs = max(min(max_pairs, max_step_pairs), 1)
     total = 0
     for start in range(0, max(wl.num_pairs, 1), max_pairs):
         sub = _slice_worklist(wl, start, start + max_pairs)

@@ -119,6 +119,7 @@ def popcount_and_gather_total(
     *,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
+    block_pairs: int | None = None,
 ) -> jax.Array:
     """Fused gather–AND–popcount total over a work-list chunk -> int32 scalar.
 
@@ -132,6 +133,10 @@ def popcount_and_gather_total(
     mirror elsewhere — on CPU the per-pair interpreter grid is a correctness
     tool rather than a performance path, and on GPU XLA fuses the mirror
     (both paths share semantics and are cross-checked in tests).
+
+    ``block_pairs`` (kernel path only) batches B pairs per grid step with an
+    in-kernel DMA loop, amortizing per-step overhead; ``None``/1 keeps the
+    one-pair-per-step index-mapped pipeline.
     """
     assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
     p = row_idx.shape[0]
@@ -153,6 +158,7 @@ def popcount_and_gather_total(
             row_idx.astype(jnp.int32),
             col_idx.astype(jnp.int32),
             interpret=_interpret(interpret),
+            block_pairs=1 if block_pairs is None else block_pairs,
         )
     return gather_total_reference(row_data, col_data, row_idx, col_idx)
 

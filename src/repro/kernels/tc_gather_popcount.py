@@ -11,22 +11,26 @@ This module is the device analogue of the MRAM computational array: the
 
   * ``gather_total_pallas`` — scalar-prefetch Pallas kernel. The pair index
     arrays are ``num_scalar_prefetch`` operands of a
-    ``pltpu.PrefetchScalarGridSpec``; they land in SMEM before the grid runs
-    and drive the index maps of ``(1, W)`` BlockSpecs over the slice stores,
-    so Mosaic's pipeline DMAs exactly the valid slice words straight from
-    the HBM-resident stores into VMEM — one pass, no gathered intermediate.
-    Consecutive identical indices reuse the already-resident block (free
-    temporal locality for hot rows, the same effect as TCIM's reuse-aware
-    cache). Negative indices are masked no-ops, which is how the executor
-    and the distributed engine pad ragged chunks.
+    ``pltpu.PrefetchScalarGridSpec``; they land in SMEM before the grid runs.
+    With ``block_pairs=1`` they drive the index maps of ``(1, W)`` BlockSpecs
+    over the slice stores, so Mosaic's pipeline DMAs exactly the valid slice
+    words straight from the HBM-resident stores into VMEM — one pass, no
+    gathered intermediate. Consecutive identical indices reuse the
+    already-resident block (free temporal locality for hot rows, the same
+    effect as TCIM's reuse-aware cache). Negative indices are masked no-ops,
+    which is how the executor and the distributed engine pad ragged chunks.
 
-    CAVEAT (untested on hardware): each grid step moves one (1, W) block —
-    8–32 bytes, far below the native (8, 128) tile — so per-step DMA
-    overhead on a real TPU may dominate despite Mosaic's pipelining, and
-    the fused-vs-unfused comparison has only been measured in interpret
-    mode. Before trusting the kernel path in production, validate on
-    hardware and, if step overhead dominates, batch B pairs per step with
-    an in-kernel DMA loop over the prefetched indices (ROADMAP open item).
+    With ``block_pairs=B > 1`` each grid step instead issues an in-kernel
+    DMA loop: the stores stay in HBM (``memory_space=ANY``) and the body
+    starts ``2B`` async copies — one ``(1, W)`` row per prefetched index —
+    into ``(B, W)`` VMEM scratch, waits once, and reduces the whole block
+    with one vectorized AND+popcount. This amortizes per-grid-step overhead
+    over B pairs (a (1, W) block is 8–32 bytes, far below the native
+    (8, 128) tile, so step overhead dominates at B=1 on real hardware).
+
+    CAVEAT (untested on hardware): both variants have only been measured in
+    interpret mode in this container; validate on a real TPU and tune B
+    before trusting the kernel path in production.
   * ``gather_total_reference`` — vectorized jnp mirror with identical
     semantics (including the negative-index contract). On the CPU backend
     (this container) the per-pair interpreter grid is a correctness tool,
@@ -78,7 +82,64 @@ def _gather_total_kernel(ridx_ref, cidx_ref, row_ref, col_ref, out_ref):
         out_ref[0, 0] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_total_batched_kernel(
+    ridx_ref, cidx_ref, row_hbm, col_hbm, out_ref, row_buf, col_buf, sems,
+    *, block_pairs: int
+):
+    """B pairs per grid step: an in-kernel DMA loop over prefetched indices.
+
+    The slice stores never leave HBM (``memory_space=ANY``); the body starts
+    one async copy per operand row into ``(B, W)`` VMEM scratch — all 2B
+    copies in flight before the first wait — then reduces the block with a
+    single vectorized AND+popcount. Out-of-range steps (the grid's ragged
+    tail) and negative (padding) indices are masked to zero; their DMAs are
+    still issued with clamped indices so every semaphore signals exactly
+    once.
+    """
+    step = pl.program_id(0)
+    num_pairs = ridx_ref.shape[0]
+    base = step * block_pairs
+
+    def pair_copies(b):
+        i = jnp.minimum(base + b, num_pairs - 1)
+        r = jnp.maximum(ridx_ref[i], 0)
+        c = jnp.maximum(cidx_ref[i], 0)
+        return (
+            pltpu.make_async_copy(
+                row_hbm.at[pl.ds(r, 1)], row_buf.at[pl.ds(b, 1)], sems.at[0, b]
+            ),
+            pltpu.make_async_copy(
+                col_hbm.at[pl.ds(c, 1)], col_buf.at[pl.ds(b, 1)], sems.at[1, b]
+            ),
+        )
+
+    for b in range(block_pairs):  # start all 2B DMAs back-to-back
+        for dma in pair_copies(b):
+            dma.start()
+    for b in range(block_pairs):
+        for dma in pair_copies(b):
+            dma.wait()
+    valid = jnp.stack(
+        [
+            (base + b < num_pairs)
+            & (ridx_ref[jnp.minimum(base + b, num_pairs - 1)] >= 0)
+            & (cidx_ref[jnp.minimum(base + b, num_pairs - 1)] >= 0)
+            for b in range(block_pairs)
+        ]
+    )
+    pc = swar_popcount_u32(row_buf[...] & col_buf[...])  # (B, W) int32
+    partial = jnp.where(valid[:, None], pc, 0).sum()
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_pairs"))
 def gather_total_pallas(
     row_data: jax.Array,  # [R, W] uint32 — row-side slice store (stays put)
     col_data: jax.Array,  # [C, W] uint32 — col-side slice store (stays put)
@@ -86,33 +147,58 @@ def gather_total_pallas(
     col_idx: jax.Array,  # [P] int32 work-list col positions (< 0 = no-op)
     *,
     interpret: bool = False,
+    block_pairs: int = 1,
 ) -> jax.Array:
     """Fused total popcount(row_data[row_idx] & col_data[col_idx]) -> int32.
 
     The gather happens *inside* the kernel: scalar-prefetched indices drive
-    the BlockSpec index maps, so each grid step's DMA pulls one valid slice
-    pair directly from the stores. Negative index pairs contribute zero.
+    either the BlockSpec index maps (``block_pairs=1``) or an in-kernel DMA
+    loop over B-pair blocks (``block_pairs>1``), so each grid step's DMAs
+    pull valid slice pairs directly from the stores. Negative index pairs
+    contribute zero.
     """
     p = row_idx.shape[0]
     assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
     assert row_data.ndim == col_data.ndim == 2
     w = row_data.shape[1]
     assert col_data.shape[1] == w, (row_data.shape, col_data.shape)
+    if block_pairs < 1:
+        raise ValueError(f"block_pairs must be >= 1, got {block_pairs}")
     if p == 0:
         return jnp.int32(0)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(p,),
-        in_specs=[
-            # Clamp so padded (-1) entries still produce a legal DMA; the
-            # kernel body masks their contribution to zero.
-            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ri[i], 0), 0)),
-            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ci[i], 0), 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda i, ri, ci: (0, 0)),
-    )
+    if block_pairs > 1:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=((p + block_pairs - 1) // block_pairs,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, ri, ci: (0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_pairs, w), jnp.uint32),
+                pltpu.VMEM((block_pairs, w), jnp.uint32),
+                pltpu.SemaphoreType.DMA((2, block_pairs)),
+            ],
+        )
+        kernel = functools.partial(
+            _gather_total_batched_kernel, block_pairs=block_pairs
+        )
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(p,),
+            in_specs=[
+                # Clamp so padded (-1) entries still produce a legal DMA; the
+                # kernel body masks their contribution to zero.
+                pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ri[i], 0), 0)),
+                pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ci[i], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, ri, ci: (0, 0)),
+        )
+        kernel = _gather_total_kernel
     out = pl.pallas_call(
-        _gather_total_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
         interpret=interpret,

@@ -1,0 +1,265 @@
+"""ExecutionPlan + ExecutorPool + double-buffered Executor regression tests.
+
+The planner's contract: every work-list pair lands in exactly one stripe, on
+the shard owning its column slice, with shard-local coordinates; chunk
+buckets are pow2 and provably int32-safe. The pool's contract: two graphs
+with an equal trace key add zero new traces. The double-buffered executor's
+contract: bit-identical counts to the serial path on every worklist shape.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceTopology,
+    Executor,
+    ExecutorPool,
+    build_sbf,
+    build_worklist,
+    clamp_chunk_pairs,
+    plan_execution,
+)
+from repro.core.sbf import SlicedBitmap
+from repro.graphs import build_graph, rmat
+from repro.graphs.exact import triangles_intersection
+from repro.kernels.ops import INT32_SAFE_WORDS
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    edges = rmat(400, 2500, seed=1)
+    g = build_graph(edges)
+    sbf = build_sbf(g, 64)
+    wl = build_worklist(g, sbf)
+    return g, sbf, wl
+
+
+def _fake_sbf(words_per_slice: int) -> SlicedBitmap:
+    """A store-shaped SBF with zero valid slices (shape-only tests)."""
+    return SlicedBitmap(
+        slice_bits=words_per_slice * 32,
+        n=1,
+        n_slices=1,
+        row_ptr=np.zeros(2, np.int64),
+        row_slice_idx=np.zeros(0, np.int32),
+        row_slice_data=np.zeros((0, words_per_slice), np.uint32),
+        col_ptr=np.zeros(2, np.int64),
+        col_slice_idx=np.zeros(0, np.int32),
+        col_slice_data=np.zeros((0, words_per_slice), np.uint32),
+    )
+
+
+# --------------------------------------------------------------------- planner
+
+
+def test_replicated_plan_single_stripe(small_graph):
+    _, sbf, wl = small_graph
+    plan = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=1), placement="auto"
+    )
+    assert plan.placement == "replicated"
+    assert plan.num_shards == 1 and len(plan.stripes) == 1
+    s = plan.stripes[0]
+    np.testing.assert_array_equal(s.row_pos, wl.pair_row_pos.astype(np.int32))
+    np.testing.assert_array_equal(s.col_pos, wl.pair_col_pos.astype(np.int32))
+
+
+@pytest.mark.parametrize("shards", [2, 4, 7])
+def test_sharded_stripes_partition_worklist(small_graph, shards):
+    """Owner-grouped stripes: every pair exactly once, shard-local coords."""
+    _, sbf, wl = small_graph
+    plan = plan_execution(
+        sbf,
+        wl,
+        DeviceTopology(num_devices=shards),
+        placement="sharded_cols",
+    )
+    assert plan.placement == "sharded_cols"
+    assert plan.num_shards == shards
+    assert plan.total_pairs == wl.num_pairs
+    per = plan.col_shard_rows
+    rebuilt = []
+    for s in plan.stripes:
+        assert s.col_pos.min(initial=0) >= 0
+        assert s.col_pos.max(initial=-1) < per  # strictly shard-local
+        glob = s.col_pos.astype(np.int64) + s.shard * per
+        assert glob.max(initial=-1) < len(sbf.col_slice_idx)
+        rebuilt.append(np.stack([s.row_pos.astype(np.int64), glob], axis=1))
+    rebuilt = np.concatenate(rebuilt)
+    want = np.stack(
+        [wl.pair_row_pos.astype(np.int64), wl.pair_col_pos.astype(np.int64)],
+        axis=1,
+    )
+    # Same multiset of (row, col) pairs, any order.
+    assert sorted(map(tuple, rebuilt)) == sorted(map(tuple, want))
+
+
+def test_auto_placement_thresholds(small_graph):
+    _, sbf, wl = small_graph
+    multi = DeviceTopology(num_devices=8)
+    # Tiny store on a big mesh stays replicated under the default threshold…
+    plan = plan_execution(sbf, wl, multi, placement="auto")
+    assert plan.placement == "replicated"
+    # …and shards once the store exceeds the (here: forced) threshold.
+    plan = plan_execution(sbf, wl, multi, placement="auto", shard_above_bytes=1)
+    assert plan.placement == "sharded_cols"
+    # Single device can never shard.
+    single = DeviceTopology(num_devices=1)
+    plan = plan_execution(sbf, wl, single, placement="auto", shard_above_bytes=1)
+    assert plan.placement == "replicated"
+
+
+def test_chunk_bucket_pow2_and_int32_safe(small_graph):
+    _, sbf, wl = small_graph
+    for req in (1, 7, 300, 1 << 20, 1 << 40):
+        plan = plan_execution(
+            sbf, wl, DeviceTopology(num_devices=1), chunk_pairs=req
+        )
+        c = plan.chunk_pairs
+        assert c & (c - 1) == 0 and c <= req
+        assert c * sbf.words_per_slice * 32 <= 2**31 - 1
+
+
+def test_clamp_chunk_pairs_overflow_raises():
+    """Satellite: words_per_slice > INT32_SAFE_WORDS used to crash with
+    ``1 << -1``; it must now raise a clear ValueError instead."""
+    with pytest.raises(ValueError, match="words_per_slice"):
+        clamp_chunk_pairs(1 << 20, INT32_SAFE_WORDS + 1)
+    with pytest.raises(ValueError, match="chunk_pairs"):
+        clamp_chunk_pairs(0, 2)
+    # Boundary: exactly INT32_SAFE_WORDS words is still a legal 1-pair chunk.
+    assert clamp_chunk_pairs(1 << 20, INT32_SAFE_WORDS) == 1
+
+
+def test_executor_rejects_overflowing_words_per_slice():
+    """Executor.__init__ regression: giant slices raise, not ``1 << -1``."""
+    with pytest.raises(ValueError, match="words_per_slice"):
+        Executor(_fake_sbf(INT32_SAFE_WORDS + 1))
+
+
+# ------------------------------------------------------------------- executor
+
+
+def test_double_buffered_matches_serial(small_graph):
+    """Buffered and serial paths are semantics-identical on ragged, empty,
+    and multi-chunk worklists (single-end-sync contract unchanged)."""
+    g, sbf, wl = small_graph
+    want = triangles_intersection(g)
+    buf = Executor(sbf, chunk_pairs=256, double_buffer=True)
+    ser = Executor(sbf, chunk_pairs=256, double_buffer=False)
+    assert wl.num_pairs > 4 * 256  # genuinely multi-chunk
+    assert buf.count(wl) == ser.count(wl) == want
+    empty = np.zeros(0, np.int64)
+    assert buf.execute_indices(empty, empty) == 0
+    for sub in (1, 3, 255, 256, 257, wl.num_pairs - 1):
+        r, c = wl.pair_row_pos[:sub], wl.pair_col_pos[:sub]
+        assert buf.execute_indices(r, c) == ser.execute_indices(r, c), sub
+
+
+def test_store_pow2_padding_is_noop(small_graph):
+    g, sbf, wl = small_graph
+    want = triangles_intersection(g)
+    padded = Executor(sbf, pad_stores_pow2=True)
+    exact = Executor(sbf, pad_stores_pow2=False)
+    assert padded.count(wl) == exact.count(wl) == want
+    rows = padded.row_data.shape[0]
+    assert rows & (rows - 1) == 0  # genuinely bucketed
+
+
+# ----------------------------------------------------------------------- pool
+
+
+def _same_bucket_graphs():
+    """Two *different* graphs that land in identical trace buckets."""
+    out = []
+    for seed in (1, 7):
+        g = build_graph(rmat(400, 2500, seed=seed))
+        sbf = build_sbf(g, 64)
+        out.append((g, sbf, build_worklist(g, sbf)))
+    k0 = ExecutorPool.trace_key(out[0][1], chunk_pairs=256)
+    k1 = ExecutorPool.trace_key(out[1][1], chunk_pairs=256)
+    assert k0 == k1, (k0, k1)  # precondition for the zero-trace guarantee
+    return out
+
+
+def test_pool_identity_hit_and_lru_eviction(small_graph):
+    _, sbf, _ = small_graph
+    pool = ExecutorPool(max_graphs=1)
+    e1 = pool.get(sbf)
+    assert pool.get(sbf) is e1 and pool.hits == 1
+    other = build_sbf(build_graph(rmat(100, 500, seed=3)), 64)
+    pool.get(other)
+    assert len(pool) == 1  # LRU evicted the first graph's stores
+    assert pool.get(sbf) is not e1  # re-admitted fresh
+    assert pool.stats()["graphs"] == 1
+
+
+def test_pool_zero_new_traces_across_graphs():
+    """Acceptance: counting a second graph with an equal (words_per_slice,
+    bucket, mode, store-bucket) key adds zero new traces."""
+    (g1, sbf1, wl1), (g2, sbf2, wl2) = _same_bucket_graphs()
+    pool = ExecutorPool()
+    e1 = pool.get(sbf1, chunk_pairs=256)
+    # Count in fixed 256-buckets on both graphs: prefixes are multiples of
+    # 256, so every chunk shape the second count sees, the first traced.
+    n1 = (wl1.num_pairs // 256) * 256
+    n2 = (wl2.num_pairs // 256) * 256
+    assert n1 > 0 and n2 > 0
+    r1 = e1.execute_indices(wl1.pair_row_pos[:n1], wl1.pair_col_pos[:n1])
+    if e1.trace_count == -1:
+        pytest.skip("jit cache size API unavailable on this jax")
+    before = e1.trace_count
+    e2 = pool.get(sbf2, chunk_pairs=256)
+    assert e2 is not e1
+    r2 = e2.execute_indices(wl2.pair_row_pos[:n2], wl2.pair_col_pos[:n2])
+    assert e2.trace_count - before == 0
+    assert r1 != r2 or g1.m != g2.m  # genuinely different graphs/counts
+    stats = pool.stats()
+    assert stats["trace_groups"] == 1 and stats["graphs"] == 2
+
+
+def test_pool_distinct_modes_do_not_collide(small_graph):
+    g, sbf, wl = small_graph
+    want = triangles_intersection(g)
+    pool = ExecutorPool()
+    assert pool.get(sbf, mode="fused").count(wl) == want
+    assert pool.get(sbf, mode="jnp").count(wl) == want
+    assert len(pool) == 2
+
+
+def test_pool_distinct_executor_kwargs_do_not_collide(small_graph):
+    """Review regression: config kwargs are part of the cache key — a
+    serial-path request must never be handed the buffered executor."""
+    _, sbf, _ = small_graph
+    pool = ExecutorPool()
+    buffered = pool.get(sbf)
+    serial = pool.get(sbf, double_buffer=False)
+    assert buffered is not serial
+    assert buffered.double_buffer and not serial.double_buffer
+    assert pool.get(sbf, double_buffer=False) is serial  # still a hit
+
+
+def test_pool_content_key_hits_across_rebuilt_sbf(small_graph):
+    """Review regression: the pool keys by store content, so the one-shot
+    API (fresh SlicedBitmap per call) actually hits on a recount."""
+    from repro.core import tcim_count_graph
+
+    g, sbf, _ = small_graph
+    pool = ExecutorPool()
+    r1 = tcim_count_graph(g, pool=pool)
+    r2 = tcim_count_graph(g, pool=pool)  # rebuilds the SBF internally
+    assert r1.triangles == r2.triangles
+    assert pool.hits >= 1 and len(pool) == 1
+    # An identical-content rebuild of the SBF hits the same entry.
+    rebuilt = build_sbf(g, 64)
+    assert rebuilt is not sbf
+    assert pool.get(rebuilt) is pool.get(sbf)
+
+
+def test_auto_placement_without_mesh_stays_replicated(small_graph):
+    """Review regression: 'auto' with no mesh must resolve to replicated
+    (nothing to shard over), never raise the needs-a-mesh error."""
+    from repro.core import tcim_count_graph
+
+    g, _, _ = small_graph
+    res = tcim_count_graph(g, placement="auto")
+    assert res.stats["placement"] == "replicated"

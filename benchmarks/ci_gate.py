@@ -1,0 +1,85 @@
+"""CI bench gate: emit ``BENCH_ci.json`` and enforce the imbalance bound.
+
+Runs the table5 smoke row (smallest bench graph, end-to-end with triangle
+counts asserted > 0) plus the planner's weighted-vs-even split imbalance on
+the degree-ordered bench graphs, writes everything to ``BENCH_ci.json``
+(uploaded as a CI artifact — the repo's bench trajectory), and exits
+nonzero if any weighted-split config exceeds ``IMBALANCE_GATE``:
+
+    PYTHONPATH=src:. python benchmarks/ci_gate.py [out.json]
+
+The gate pins the tentpole claim of the 2-D sharded execute path: weighted
+(pair-count-balanced) ranges keep ``plan.imbalance`` <= 1.25 on the owner
+grids CI exercises, where the legacy contiguous even split shows 2-5x.
+Plan-only checks are pure numpy, so the gate runs in seconds on one device.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+IMBALANCE_GATE = 1.25
+# Degree-ordered bench graphs small enough for a fast CI job.
+GATE_GRAPHS = ("ego-facebook", "email-enron")
+# (row_shards, col_shards) owner grids the gate checks, 1-D and 2-D.
+GATE_GRIDS = ((1, 4), (1, 8), (2, 2), (4, 2))
+
+
+def run(out_path: str = "BENCH_ci.json") -> int:
+    from benchmarks.common import bench_graphs
+    from benchmarks.table5_runtime import run as table5_run
+    from repro.core import DeviceTopology, plan_execution
+
+    rows = table5_run(["ego-facebook"])
+    assert rows and rows[0]["triangles"] > 0, rows
+
+    imbalance = []
+    for name, cfg, scaled, g, sbf, wl in bench_graphs(GATE_GRAPHS):
+        for rows_s, cols_s in GATE_GRIDS:
+            topo = DeviceTopology(num_devices=rows_s * cols_s)
+            plans = {
+                split: plan_execution(
+                    sbf, wl, topo, placement="sharded_2d",
+                    grid=(rows_s, cols_s), split=split,
+                )
+                for split in ("weighted", "even")
+            }
+            imbalance.append(
+                {
+                    "graph": name,
+                    "grid": [rows_s, cols_s],
+                    "num_pairs": wl.num_pairs,
+                    "imbalance_weighted": round(plans["weighted"].imbalance, 4),
+                    "imbalance_even": round(plans["even"].imbalance, 4),
+                }
+            )
+
+    payload = {
+        "gate": IMBALANCE_GATE,
+        "table5": rows,
+        "imbalance": imbalance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"wrote {out_path}: {len(rows)} table5 rows, "
+          f"{len(imbalance)} imbalance configs")
+
+    failures = [
+        r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
+    ]
+    for r in imbalance:
+        status = "FAIL" if r in failures else "ok"
+        print(
+            f"  [{status}] {r['graph']} {r['grid'][0]}x{r['grid'][1]}: "
+            f"weighted={r['imbalance_weighted']:.2f} "
+            f"even={r['imbalance_even']:.2f} (gate {IMBALANCE_GATE})"
+        )
+    if failures:
+        print(f"imbalance gate FAILED for {len(failures)} config(s)")
+        return 1
+    print("imbalance gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run(*sys.argv[1:2]))

@@ -1,6 +1,6 @@
-"""Distributed TCIM across a (data, model) device mesh via shard_map.
+"""Distributed TCIM across a device mesh via shard_map.
 
-Two placements of the same count (see core/plan.py):
+Three placements of the same count (see core/plan.py):
 
   * replicated   — both slice stores on every device, work-list stripes
     dealt across the mesh, one scalar psum closes it.
@@ -8,6 +8,10 @@ Two placements of the same count (see core/plan.py):
     the mesh (one contiguous row range per device) with the work list
     owner-grouped so each pair executes on the shard holding its column
     slice; only index stripes travel.
+  * sharded_2d   — BOTH stores sharded over a 2-axis (row, col) owner
+    grid with pair-count-weighted ranges; device (i, j) holds row range i
+    and column range j, and every pair executes on its owner block. The
+    placement that lets row stores exceed one device's memory.
 
 Forces 8 host devices so the demo is genuinely multi-device on CPU (remove
 the flag on a real pod).
@@ -21,7 +25,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 
 from repro.core import build_sbf, build_worklist, plan_execution, DeviceTopology  # noqa: E402
-from repro.distributed import ShardedColsExecutor, distributed_tc_count  # noqa: E402
+from repro.distributed import (  # noqa: E402
+    Sharded2DExecutor,
+    ShardedColsExecutor,
+    distributed_tc_count,
+)
 from repro.graphs import build_graph, rmat  # noqa: E402
 from repro.graphs.exact import triangles_intersection  # noqa: E402
 
@@ -56,6 +64,25 @@ def main():
           f"(replicated? {ex.col_store.sharding.is_fully_replicated})")
     print(f"  stripes: min={min(stripe_pairs)} max={max(stripe_pairs)} "
           f"imbalance={plan.imbalance:.2f}")
+
+    # Both stores sharded over a 4x2 (row, col) owner grid, pair-count-
+    # weighted ranges: neither store is replicated any more.
+    mesh2 = jax.make_mesh((4, 2), ("r", "c"))
+    plan2 = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=n_dev),
+        placement="sharded_2d", grid=(4, 2),
+    )
+    ex2 = Sharded2DExecutor(sbf, mesh2, plan2)
+    got_2d = ex2.count_plan(plan2)
+    blocks = plan2.stats["stripe_pairs"]
+    print(f"sharded_2d   count = {got_2d}; "
+          f"{'OK' if got_2d == want else 'MISMATCH'}")
+    print(f"  row store: {ex2.row_store.shape} as {ex2.row_store.sharding.spec} "
+          f"(replicated? {ex2.row_store.sharding.is_fully_replicated})")
+    print(f"  col store: {ex2.col_store.shape} as {ex2.col_store.sharding.spec} "
+          f"(replicated? {ex2.col_store.sharding.is_fully_replicated})")
+    print(f"  blocks: min={min(blocks)} max={max(blocks)} "
+          f"imbalance={plan2.imbalance:.2f} (split={plan2.split})")
 
 
 if __name__ == "__main__":

@@ -12,11 +12,17 @@ from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
 from repro.core.executor import EXECUTOR_MODES, Executor, ExecutorPool
 from repro.core.plan import (
     PLACEMENTS,
+    SPLITS,
     DeviceTopology,
     ExecutionPlan,
     WorkStripe,
+    balance_grid_bounds,
+    bottleneck_range_bounds,
     clamp_chunk_pairs,
+    even_range_bounds,
     plan_execution,
+    range_owners,
+    weighted_range_bounds,
 )
 from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
 from repro.core.tcim import BACKENDS, TCResult, tcim_count, tcim_count_graph
@@ -41,11 +47,17 @@ __all__ = [
     "ExecutorPool",
     "EXECUTOR_MODES",
     "PLACEMENTS",
+    "SPLITS",
     "DeviceTopology",
     "ExecutionPlan",
     "WorkStripe",
+    "balance_grid_bounds",
+    "bottleneck_range_bounds",
     "clamp_chunk_pairs",
+    "even_range_bounds",
     "plan_execution",
+    "range_owners",
+    "weighted_range_bounds",
     "BACKENDS",
     "TCResult",
     "tcim_count",

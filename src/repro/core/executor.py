@@ -83,11 +83,36 @@ from repro.kernels import ops, ref
 from repro.kernels.common import on_cpu
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
-__all__ = ["Executor", "ExecutorPool", "EXECUTOR_MODES"]
+__all__ = ["Executor", "ExecutorPool", "EXECUTOR_MODES", "staged_uploads"]
 
 EXECUTOR_MODES = ("fused", "gather_then_kernel", "pallas_items", "jnp")
 
 _INT32_MAX = 2**31 - 1
+
+
+def staged_uploads(chunks, put, *, double_buffer: bool = True):
+    """Stage device uploads one chunk ahead of the consumer.
+
+    ``chunks`` yields host-side work units; ``put`` turns one into its
+    device-resident form (e.g. ``jax.device_put``, possibly with an explicit
+    sharding). With ``double_buffer`` the i+1-th ``put`` is issued before
+    chunk i is yielded, so its host->device transfer proceeds while the
+    consumer's dispatch of chunk i runs; the serial path stages on demand.
+    Both yield the same sequence — shared by the replicated Executor and the
+    sharded executors in ``distributed.tc``.
+    """
+    if not double_buffer:
+        for chunk in chunks:
+            yield put(chunk)
+        return
+    ahead = None
+    for chunk in chunks:
+        cur = put(chunk)
+        if ahead is not None:
+            yield ahead  # consumer dispatches i while i+1 uploads
+        ahead = cur
+    if ahead is not None:
+        yield ahead
 
 
 def _pad_rows_pow2(a: np.ndarray) -> np.ndarray:
@@ -222,21 +247,14 @@ class Executor:
         With double buffering, chunk i+1's pad/convert work and its
         ``device_put`` staging are issued before chunk i is yielded, so the
         i+1 transfer is already under way when the consumer dispatches chunk
-        i's fused step. The serial path stages on demand instead. Both yield
-        the same chunk sequence; counts are bit-identical.
+        i's fused step (see ``staged_uploads``). Counts are bit-identical
+        either way.
         """
-        if not self.double_buffer:
-            for r, c in self._chunks(row_idx, col_idx):
-                yield jax.device_put(r), jax.device_put(c)
-            return
-        ahead = None
-        for r, c in self._chunks(row_idx, col_idx):
-            cur = (jax.device_put(r), jax.device_put(c))
-            if ahead is not None:
-                yield ahead  # consumer dispatches i while i+1 uploads
-            ahead = cur
-        if ahead is not None:
-            yield ahead
+        return staged_uploads(
+            self._chunks(row_idx, col_idx),
+            lambda rc: (jax.device_put(rc[0]), jax.device_put(rc[1])),
+            double_buffer=self.double_buffer,
+        )
 
     def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
         """Count over explicit work-list index arrays. One host sync total."""

@@ -7,21 +7,33 @@ the software analogue of that mapping step, one level above the Executor:
 given an SBF, a work list, and a device topology it decides
 
   * **placement** — ``replicated`` (every device holds both slice stores;
-    zero communication beyond the closing psum) vs ``sharded_cols`` (the
+    zero communication beyond the closing psum), ``sharded_cols`` (the
     column store is partitioned into contiguous row ranges, one range per
-    shard, for graphs whose SBF does not fit a single device),
-  * **work partitioning** — for sharded placement the work list is bucketed
-    into *owner-grouped stripes*: every pair goes to the shard that owns its
-    column slice, and its column position is rewritten to be shard-local.
-    A sharded count therefore needs no per-step all-gather of the column
-    store in the common case — each shard reads only its resident rows,
+    shard; the row store stays replicated), or ``sharded_2d`` (BOTH stores
+    partitioned into contiguous ranges over a 2-axis ``(row, col)`` owner
+    grid — the placement that lets row stores exceed one device's memory),
+  * **work partitioning** — for sharded placements the work list is bucketed
+    into *owner-grouped stripes*: every pair goes to the shard (or
+    ``(row_shard, col_shard)`` block) that owns its slice data, with its
+    positions rewritten to be shard-local on the sharded axes. A sharded
+    count therefore needs no per-step all-gather of slice data — each shard
+    reads only its resident rows,
+  * **range splitting** — ``even`` contiguous ranges (equal record counts
+    per shard) or ``weighted`` ranges balanced by *pair count*: boundaries
+    are placed on the work list's cumulative per-record weights
+    (``weighted_range_bounds``), and for 2-D grids an alternating
+    bottleneck refinement (``balance_grid_bounds``) re-cuts each axis
+    against the other's owners so per-block pair counts stay near uniform
+    even on degree-ordered graphs, where the even split shows up to ~4x
+    stripe imbalance (``plan.imbalance``),
   * **chunking** — the pow2 chunk bucket all executors run (rounded down to
     the caller's memory bound and clamped so one chunk's worst-case count
     provably fits the int32 accumulator).
 
 Consumers: ``core.tcim`` routes ``tcim_count_graph(placement=...)`` through
-``plan_execution``; ``distributed.tc`` turns a ``sharded_cols`` plan into a
-``NamedSharding``-sharded store plus per-shard stripes under ``shard_map``.
+``plan_execution``; ``distributed.tc`` turns a ``sharded_cols`` /
+``sharded_2d`` plan into ``NamedSharding``-sharded stores plus per-shard
+stripes under ``shard_map``.
 """
 from __future__ import annotations
 
@@ -34,6 +46,7 @@ from repro.kernels.ops import INT32_SAFE_WORDS
 
 __all__ = [
     "PLACEMENTS",
+    "SPLITS",
     "DeviceTopology",
     "WorkStripe",
     "ExecutionPlan",
@@ -41,6 +54,11 @@ __all__ = [
     "clamp_chunk_pairs",
     "pow2_ceil",
     "shard_col_bounds",
+    "even_range_bounds",
+    "weighted_range_bounds",
+    "bottleneck_range_bounds",
+    "balance_grid_bounds",
+    "range_owners",
 ]
 
 
@@ -49,8 +67,12 @@ def pow2_ceil(x: int) -> int:
     layer shares (chunk tails, store rows, sharded step lengths)."""
     return 1 << max(0, (x - 1).bit_length())
 
-# "auto" resolves to one of the other two at planning time.
-PLACEMENTS = ("auto", "replicated", "sharded_cols")
+# "auto" resolves to one of the concrete placements at planning time.
+PLACEMENTS = ("auto", "replicated", "sharded_cols", "sharded_2d")
+
+# Requestable range splits for sharded placements. A plan built from
+# caller-fixed bounds records split="fixed" instead (not requestable).
+SPLITS = ("even", "weighted")
 
 # Default store size above which "auto" prefers sharding when a multi-device
 # topology is available. All SNAP-class graphs (Table III tops out at
@@ -94,6 +116,144 @@ def shard_col_bounds(num_col_slices: int, num_shards: int) -> tuple[int, int]:
     return per, per * num_shards
 
 
+def even_range_bounds(num_records: int, num_shards: int) -> np.ndarray:
+    """Contiguous equal-record-count boundaries ``[S+1]`` (the legacy split).
+
+    ``bounds[s]`` is the first store row shard ``s`` owns; matches the
+    division-based owner rule (``pos // per``) of ``shard_col_bounds``.
+    """
+    per, _ = shard_col_bounds(num_records, num_shards)
+    return np.minimum(
+        np.arange(num_shards + 1, dtype=np.int64) * per, num_records
+    )
+
+
+def weighted_range_bounds(weights: np.ndarray, num_shards: int) -> np.ndarray:
+    """Contiguous boundaries ``[S+1]`` balanced by cumulative *weight*.
+
+    ``weights[r]`` is the pair count referencing store row ``r``; the cuts
+    land where the prefix sum crosses each ``s/S`` fraction of the total, so
+    every range carries a near-equal share of the work (exact to within one
+    record's weight). This is the 1-D fix for degree-ordered graphs, whose
+    hot leading rows give the even split up to ~4x stripe imbalance.
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    cum = np.concatenate([np.zeros(1, np.int64), np.cumsum(w)])
+    targets = (np.arange(1, num_shards, dtype=np.int64) * cum[-1]) // num_shards
+    cuts = np.searchsorted(cum, targets, side="left").astype(np.int64)
+    bounds = np.concatenate([[0], cuts, [len(w)]]).astype(np.int64)
+    np.maximum.accumulate(bounds, out=bounds)
+    return bounds
+
+
+def bottleneck_range_bounds(counts: np.ndarray, num_shards: int) -> np.ndarray:
+    """Contiguous split of ``counts``'s rows minimizing the worst block.
+
+    ``counts[r, j]`` is the pair count of store row ``r`` against the
+    *other* axis's shard ``j``; the returned boundaries ``[S+1]`` minimize
+    ``max over (range, j)`` of the range's column-wise sums — i.e. the
+    heaviest ``(row_shard, col_shard)`` block given the other axis's cuts.
+    Binary search on the bottleneck with a greedy furthest-extension
+    feasibility check (optimal for monotone contiguous partitions).
+    """
+    n = int(counts.shape[0])
+    if n == 0 or counts.size == 0:
+        return np.zeros(num_shards + 1, dtype=np.int64)
+    pref = np.concatenate(
+        [np.zeros((1, counts.shape[1]), np.int64),
+         np.cumsum(counts, axis=0, dtype=np.int64)]
+    )
+
+    def feasible(limit: int) -> np.ndarray | None:
+        bounds = [0]
+        cur = 0
+        for _ in range(num_shards):
+            lo, hi = cur, n
+            while lo < hi:  # furthest end keeping every column sum <= limit
+                mid = (lo + hi + 1) // 2
+                if (pref[mid] - pref[cur] <= limit).all():
+                    lo = mid
+                else:
+                    hi = mid - 1
+            if lo == cur and cur < n:
+                return None  # a single row already exceeds the limit
+            bounds.append(lo)
+            cur = lo
+            if cur == n:
+                bounds += [n] * (num_shards + 1 - len(bounds))
+                return np.array(bounds, dtype=np.int64)
+        return np.array(bounds, dtype=np.int64) if cur == n else None
+
+    lo = int(counts.max())
+    hi = int(pref[-1].max())
+    best = feasible(hi)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        cand = feasible(mid)
+        if cand is not None:
+            best, hi = cand, mid
+        else:
+            lo = mid + 1
+    return best
+
+
+def range_owners(bounds: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    """Owner shard of each position under contiguous ``bounds`` ``[S+1]``.
+
+    Duplicate boundaries (empty ranges) resolve to the range that actually
+    contains the position, so owners are always in ``[0, S)`` for in-range
+    positions.
+    """
+    return (np.searchsorted(bounds, pos, side="right") - 1).astype(np.int64)
+
+
+def balance_grid_bounds(
+    row_pos: np.ndarray,
+    col_pos: np.ndarray,
+    num_row_records: int,
+    num_col_records: int,
+    grid: tuple[int, int],
+    *,
+    iters: int = 3,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Weighted 2-D cuts: per-block pair counts near-uniform on both axes.
+
+    Marginal balancing alone is not enough in 2-D — row/col weights are
+    correlated on degree-ordered graphs, so independently balanced marginals
+    can still leave >1.3x block imbalance. Instead: seed the column axis
+    with marginal-weighted cuts, then alternate ``bottleneck_range_bounds``
+    on each axis *against the other axis's current owners*, keeping the
+    best (lowest max-block) cut pair seen. A few iterations drive the bench
+    graphs' 4x2 block imbalance from ~4-5x (even split) to <1.2x.
+    """
+    rows, cols = grid
+    rp = np.asarray(row_pos, dtype=np.int64)
+    cp = np.asarray(col_pos, dtype=np.int64)
+    col_bounds = weighted_range_bounds(
+        np.bincount(cp, minlength=num_col_records), cols
+    )
+    best: tuple[int, np.ndarray, np.ndarray] | None = None
+    total = max(iters, 1)
+    for it in range(total):
+        col_owner = range_owners(col_bounds, cp)
+        by_row = np.zeros((num_row_records, cols), np.int64)
+        if len(rp):
+            np.add.at(by_row, (rp, col_owner), 1)
+        row_bounds = bottleneck_range_bounds(by_row, rows)
+        row_owner = range_owners(row_bounds, rp)
+        blocks = np.bincount(row_owner * cols + col_owner, minlength=rows * cols)
+        worst = int(blocks.max()) if blocks.size else 0
+        if best is None or worst < best[0]:
+            best = (worst, row_bounds.copy(), col_bounds.copy())
+        if it == total - 1:
+            break  # the col refinement below only feeds the next iteration
+        by_col = np.zeros((num_col_records, rows), np.int64)
+        if len(cp):
+            np.add.at(by_col, (cp, row_owner), 1)
+        col_bounds = bottleneck_range_bounds(by_col, cols)
+    return best[1], best[2]
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceTopology:
     """What the planner knows about the machine (mesh-agnostic)."""
@@ -121,16 +281,20 @@ class DeviceTopology:
 
 @dataclasses.dataclass(frozen=True)
 class WorkStripe:
-    """The pairs one column-store shard executes.
+    """The pairs one owner shard (or owner-grid block) executes.
 
-    ``col_pos`` is *local* to the owning shard's contiguous row range;
-    ``row_pos`` stays global (the row store is replicated). For a
-    ``replicated`` plan there is exactly one stripe with global coordinates.
+    For ``sharded_cols``: ``col_pos`` is *local* to the owning shard's
+    contiguous row range; ``row_pos`` stays global (the row store is
+    replicated). For ``sharded_2d``: BOTH coordinates are local to the
+    ``(row_shard, col_shard)`` block's ranges. For a ``replicated`` plan
+    there is exactly one stripe with global coordinates.
     """
 
-    shard: int
+    shard: int  # flat index: row_shard * col_shards + col_shard
     row_pos: np.ndarray  # int32 [P_s]
     col_pos: np.ndarray  # int32 [P_s]
+    row_shard: int = 0
+    col_shard: int = 0
 
     @property
     def num_pairs(self) -> int:
@@ -139,13 +303,21 @@ class WorkStripe:
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
-    placement: str  # resolved: "replicated" | "sharded_cols"
-    num_shards: int
+    placement: str  # resolved: "replicated" | "sharded_cols" | "sharded_2d"
+    num_shards: int  # grid[0] * grid[1]
     chunk_pairs: int  # pow2, int32-safe
     words_per_slice: int
-    col_shard_rows: int  # rows per shard after padding (0 when replicated)
+    col_shard_rows: int  # rows per col-store shard after padding (0 = replicated)
     stripes: tuple[WorkStripe, ...]
     stats: dict
+    grid: tuple[int, int] = (1, 1)  # (row_shards, col_shards)
+    row_shard_rows: int = 0  # rows per row-store shard (sharded_2d only)
+    split: str = "even"  # "even" | "weighted" | "fixed" (caller bounds)
+    # Contiguous store-row boundaries per axis, [shards+1]; None when the
+    # axis is replicated. Executors verify these before trusting the
+    # stripes' shard-local coordinates against their resident blocks.
+    row_bounds: np.ndarray | None = None
+    col_bounds: np.ndarray | None = None
 
     @property
     def total_pairs(self) -> int:
@@ -164,6 +336,7 @@ def _resolve_placement(
     sb: sbf_mod.SlicedBitmap,
     topo: DeviceTopology,
     shard_above_bytes: int,
+    grid: tuple[int, int] | None,
 ) -> str:
     if placement not in PLACEMENTS:
         raise ValueError(f"placement {placement!r} not in {PLACEMENTS}")
@@ -176,7 +349,30 @@ def _resolve_placement(
     threshold = shard_above_bytes
     if topo.memory_bytes:
         threshold = min(threshold, topo.memory_bytes // 2)
-    return "sharded_cols" if sb.data_bytes > threshold else "replicated"
+    if sb.data_bytes <= threshold:
+        return "replicated"
+    # A genuinely 2-D grid (both axes > 1) shards the row store too — the
+    # only placement whose per-device footprint shrinks on BOTH stores.
+    if grid is not None and min(grid) > 1:
+        return "sharded_2d"
+    return "sharded_cols"
+
+
+def _validate_bounds(
+    bounds: np.ndarray, num_shards: int, num_records: int, axis: str
+) -> np.ndarray:
+    b = np.asarray(bounds, dtype=np.int64)
+    if (
+        b.shape != (num_shards + 1,)
+        or b[0] != 0
+        or b[-1] != num_records
+        or (np.diff(b) < 0).any()
+    ):
+        raise ValueError(
+            f"{axis}_bounds must be monotone [0..{num_records}] with "
+            f"{num_shards + 1} entries, got {b!r}"
+        )
+    return b
 
 
 def plan_execution(
@@ -188,16 +384,32 @@ def plan_execution(
     chunk_pairs: int = 1 << 20,
     num_shards: int | None = None,
     shard_above_bytes: int = DEFAULT_SHARD_ABOVE_BYTES,
+    grid: tuple[int, int] | None = None,
+    split: str | None = None,
+    row_bounds: np.ndarray | None = None,
+    col_bounds: np.ndarray | None = None,
+    balance_iters: int = 3,
 ) -> ExecutionPlan:
     """Choose placement, owner-group the work list, and pick chunk buckets.
 
     ``num_shards`` defaults to the topology's device count for sharded
-    placement; pass it explicitly to plan for a sub-mesh.
+    placement; pass it explicitly to plan for a sub-mesh. ``grid`` is the
+    ``(row_shards, col_shards)`` owner grid for ``sharded_2d`` (required
+    there; it also steers ``auto`` toward 2-D when both axes exceed 1).
+    ``split`` picks the range partitioning for ``sharded_2d``: ``weighted``
+    (default — pair-count-balanced ranges) or ``even`` (the legacy
+    contiguous equal-record split, kept for comparison). Passing
+    ``row_bounds``/``col_bounds`` (both or neither) pins the cuts instead —
+    how executors re-plan new work lists against already-sharded stores.
     """
     topo = topo or DeviceTopology.detect()
     wps = int(sb.words_per_slice)
     chunk = clamp_chunk_pairs(chunk_pairs, wps)
-    resolved = _resolve_placement(placement, sb, topo, shard_above_bytes)
+    if split is not None and split not in SPLITS:
+        raise ValueError(f"split {split!r} not in {SPLITS}")
+    if (row_bounds is None) != (col_bounds is None):
+        raise ValueError("pass row_bounds and col_bounds together or not at all")
+    resolved = _resolve_placement(placement, sb, topo, shard_above_bytes, grid)
 
     row_pos = np.asarray(wl.pair_row_pos, dtype=np.int32)
     col_pos = np.asarray(wl.pair_col_pos, dtype=np.int32)
@@ -218,10 +430,31 @@ def plan_execution(
             },
         )
 
+    if resolved == "sharded_2d":
+        return _plan_sharded_2d(
+            sb, wl, row_pos, col_pos, chunk, wps,
+            grid=grid,
+            num_shards=num_shards,
+            split=split,
+            row_bounds=row_bounds,
+            col_bounds=col_bounds,
+            balance_iters=balance_iters,
+        )
+
+    # sharded_cols: the 1-D legacy placement keeps its even contiguous
+    # split (its executor's store layout is worklist-independent); weighted
+    # 1-D splits are sharded_2d with grid=(1, S).
+    if split == "weighted":
+        raise ValueError(
+            "sharded_cols only supports the even split; for weighted "
+            "(pair-count-balanced) ranges use placement='sharded_2d' with "
+            "grid=(1, num_shards)"
+        )
     shards = int(num_shards or topo.num_devices)
     if shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {shards}")
-    per, _padded = shard_col_bounds(len(sb.col_slice_idx), shards)
+    ncol = len(sb.col_slice_idx)
+    per, _padded = shard_col_bounds(ncol, shards)
     owner = col_pos // per  # contiguous ranges -> owner is a division
     stripes = []
     for s in range(shards):
@@ -231,6 +464,8 @@ def plan_execution(
                 shard=s,
                 row_pos=row_pos[sel],
                 col_pos=col_pos[sel] - s * per,  # shard-local coordinates
+                row_shard=0,
+                col_shard=s,
             )
         )
     plan = ExecutionPlan(
@@ -240,12 +475,107 @@ def plan_execution(
         words_per_slice=wps,
         col_shard_rows=per,
         stripes=tuple(stripes),
+        grid=(1, shards),
+        split="even",
+        col_bounds=even_range_bounds(ncol, shards),
         stats={
             "store_bytes": sb.data_bytes,
             "num_pairs": wl.num_pairs,
             "stripe_pairs": [s.num_pairs for s in stripes],
             "reason": "col store sharded into contiguous row ranges; "
             "pairs owner-grouped so no per-step all-gather",
+        },
+    )
+    assert plan.total_pairs == wl.num_pairs
+    return plan
+
+
+def _plan_sharded_2d(
+    sb: sbf_mod.SlicedBitmap,
+    wl: sbf_mod.Worklist,
+    row_pos: np.ndarray,
+    col_pos: np.ndarray,
+    chunk: int,
+    wps: int,
+    *,
+    grid: tuple[int, int] | None,
+    num_shards: int | None,
+    split: str | None,
+    row_bounds: np.ndarray | None,
+    col_bounds: np.ndarray | None,
+    balance_iters: int,
+) -> ExecutionPlan:
+    """Owner-grid planning: weighted (or even/fixed) ranges on both axes,
+    every pair routed to its ``(row_shard, col_shard)`` block with
+    block-local coordinates on both sides."""
+    if grid is None:
+        raise ValueError(
+            "placement 'sharded_2d' needs grid=(row_shards, col_shards) — "
+            "pass a 2-axis mesh to tcim_count*, or grid= here"
+        )
+    rows, cols = int(grid[0]), int(grid[1])
+    if rows < 1 or cols < 1:
+        raise ValueError(f"grid axes must be >= 1, got {(rows, cols)}")
+    shards = rows * cols
+    if num_shards is not None and int(num_shards) != shards:
+        raise ValueError(
+            f"num_shards={num_shards} contradicts grid {rows}x{cols}={shards}"
+        )
+    nrow = len(sb.row_slice_idx)
+    ncol = len(sb.col_slice_idx)
+    if row_bounds is not None:
+        resolved_split = "fixed"
+        rb = _validate_bounds(row_bounds, rows, nrow, "row")
+        cb = _validate_bounds(col_bounds, cols, ncol, "col")
+    elif (split or "weighted") == "weighted":
+        resolved_split = "weighted"
+        rb, cb = balance_grid_bounds(
+            row_pos, col_pos, nrow, ncol, (rows, cols), iters=balance_iters
+        )
+    else:
+        resolved_split = "even"
+        rb = even_range_bounds(nrow, rows)
+        cb = even_range_bounds(ncol, cols)
+    # Equal NamedSharding blocks: every shard's range is padded to the pow2
+    # bucket of the longest range on its axis (pow2 so the block shape — and
+    # with it the executor's traced step — is stable across work lists).
+    row_block = pow2_ceil(max(int(np.diff(rb).max(initial=0)), 1))
+    col_block = pow2_ceil(max(int(np.diff(cb).max(initial=0)), 1))
+    row_owner = range_owners(rb, row_pos)
+    col_owner = range_owners(cb, col_pos)
+    stripes = []
+    for r in range(rows):
+        for c in range(cols):
+            sel = (row_owner == r) & (col_owner == c)
+            stripes.append(
+                WorkStripe(
+                    shard=r * cols + c,
+                    row_pos=(row_pos[sel] - rb[r]).astype(np.int32),
+                    col_pos=(col_pos[sel] - cb[c]).astype(np.int32),
+                    row_shard=r,
+                    col_shard=c,
+                )
+            )
+    plan = ExecutionPlan(
+        placement="sharded_2d",
+        num_shards=shards,
+        chunk_pairs=chunk,
+        words_per_slice=wps,
+        col_shard_rows=col_block,
+        stripes=tuple(stripes),
+        grid=(rows, cols),
+        row_shard_rows=row_block,
+        split=resolved_split,
+        row_bounds=rb,
+        col_bounds=cb,
+        stats={
+            "store_bytes": sb.data_bytes,
+            "num_pairs": wl.num_pairs,
+            "stripe_pairs": [s.num_pairs for s in stripes],
+            "split": resolved_split,
+            "reason": "both stores sharded into contiguous ranges over the "
+            f"{rows}x{cols} owner grid; pairs routed to their "
+            "(row_shard, col_shard) block — owner-compute, no all-gather",
         },
     )
     assert plan.total_pairs == wl.num_pairs

@@ -6,11 +6,15 @@ Pipeline stages (each independently testable):
     orient      edges -> upper-triangular CSR (optional degree relabelling)
     compress    SBF: valid slices only (paper §IV-B)
     schedule    work list of valid slice pairs (the 0.01% that matter)
-    plan        core.plan.plan_execution — placement (replicated vs
-                sharded_cols), owner-grouped stripes, pow2 chunk buckets
+    plan        core.plan.plan_execution — placement (replicated /
+                sharded_cols / sharded_2d), weighted or even range splits,
+                owner-grouped stripes, pow2 chunk buckets
     execute     core.executor.Executor (replicated; pooled + double-
-                buffered) or distributed.tc.ShardedColsExecutor (column
-                store NamedSharding-sharded over a mesh)
+                buffered), distributed.tc.ShardedColsExecutor (column store
+                NamedSharding-sharded over a mesh), or
+                distributed.tc.Sharded2DExecutor (BOTH stores sharded over
+                a 2-axis (row, col) owner grid with pair-count-balanced
+                ranges)
     reduce      a single exact scalar readback (psum-closed when sharded)
 
 Backends for the execute stage (mapped onto Executor modes):
@@ -94,29 +98,46 @@ def _execute_worklist(
     """Run the execute stage through the planner.
 
     Resolves ``placement`` against the device topology (the mesh's, when
-    given), then executes either on a pooled replicated Executor or on the
-    column-sharded distributed path. Returns (count, resolved placement).
+    given), then executes on a pooled replicated Executor, the
+    column-sharded distributed path, or the 2-D owner-grid path. Returns
+    (count, resolved placement).
     """
+    grid = None
     if mesh is not None:
         topo = DeviceTopology(
             num_devices=int(np.prod(mesh.devices.shape)),
             platform=mesh.devices.reshape(-1)[0].platform,
         )
+        if mesh.devices.ndim == 2:
+            grid = tuple(int(x) for x in mesh.devices.shape)
     else:
         # Without a mesh there is nothing to shard over, so "auto" must
         # resolve to replicated regardless of how many devices exist —
-        # only an *explicit* sharded_cols request errors below.
+        # only an *explicit* sharded request errors below.
         topo = DeviceTopology(num_devices=1)
+    if placement == "sharded_2d" and grid is None:
+        raise ValueError(
+            "placement 'sharded_2d' needs a 2-axis mesh= "
+            "(e.g. jax.make_mesh((4, 2), ('r', 'c'))) to place the "
+            "(row_shard, col_shard) owner grid on"
+        )
     plan = plan_execution(
-        sb, wl, topo, placement=placement, chunk_pairs=chunk_pairs
+        sb, wl, topo, placement=placement, chunk_pairs=chunk_pairs, grid=grid
     )
+    if plan.placement == "sharded_2d":
+        # Imported here: core stays importable without the distributed layer.
+        from repro.distributed.tc import pooled_sharded_2d_executor
+
+        ex = pooled_sharded_2d_executor(sb, mesh, plan, chunk_pairs=chunk_pairs)
+        # count(wl, plan) falls back to the pooled executor's resident
+        # bounds when the fresh plan's ranges differ — no store re-upload.
+        return ex.count(wl, plan), plan.placement
     if plan.placement == "sharded_cols":
         if mesh is None:
             raise ValueError(
                 "placement 'sharded_cols' needs a mesh= (jax.sharding.Mesh) "
                 "to shard the column store over"
             )
-        # Imported here: core stays importable without the distributed layer.
         from repro.distributed.tc import pooled_sharded_executor
 
         ex = pooled_sharded_executor(sb, mesh, chunk_pairs=chunk_pairs)
@@ -173,8 +194,10 @@ def tcim_count_graph(
     ``placement`` routes the execute stage through ``core.plan``:
     ``'replicated'`` (stores on every device, pooled Executor),
     ``'sharded_cols'`` (column store NamedSharding-sharded over ``mesh``;
-    requires ``mesh``), or ``'auto'`` (planner decides from store size and
-    topology; single-device stays replicated). Every mesh path (sharded, or
+    requires ``mesh``), ``'sharded_2d'`` (BOTH stores sharded over a 2-axis
+    ``mesh`` with pair-count-weighted ranges; requires a 2-axis mesh), or
+    ``'auto'`` (planner decides from store size and topology; single-device
+    stays replicated, 2-axis meshes prefer 2-D). Every mesh path (sharded, or
     replicated with a multi-device mesh — the latter deals work-list stripes
     across the mesh via ``distributed_tc_count``) runs the fused jnp mirror
     inside shard_map, so ``backend`` selects the Executor mode only for the

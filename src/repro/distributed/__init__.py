@@ -1,18 +1,22 @@
 """Distribution layer: sharded TC, LM shardings, gradient compression."""
 from repro.distributed.tc import (
+    Sharded2DExecutor,
     ShardedColsExecutor,
     TC_PLACEMENTS,
     clear_sharded_executor_cache,
     distributed_tc_count,
+    pooled_sharded_2d_executor,
     pooled_sharded_executor,
     shard_worklist,
 )
 
 __all__ = [
+    "Sharded2DExecutor",
     "ShardedColsExecutor",
     "TC_PLACEMENTS",
     "clear_sharded_executor_cache",
     "distributed_tc_count",
+    "pooled_sharded_2d_executor",
     "pooled_sharded_executor",
     "shard_worklist",
 ]

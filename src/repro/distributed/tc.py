@@ -21,6 +21,16 @@ Slice data placement (chosen by ``core.plan.plan_execution``):
     every step. ``ShardedColsExecutor`` is the device-resident unit: one
     Executor's worth of state (store shard + traced step + stripe schedule)
     per mesh device. For graphs whose SBF exceeds one device's HBM.
+  * ``sharded_2d`` — BOTH stores sharded over a 2-axis mesh: device
+    ``(i, j)`` holds row-store range ``i`` (sharded over the first mesh
+    axis, replicated over the second) and column-store range ``j`` (the
+    transpose). The planner routes every pair to its ``(row_shard,
+    col_shard)`` owner block with block-local coordinates on both axes and
+    balances the ranges by *pair count* (weighted split), so per-block work
+    stays near-uniform even on degree-ordered graphs. The placement that
+    lets row stores exceed one device's memory; ``Sharded2DExecutor`` is
+    the device-resident unit, reusing the replicated Executor's pow2 step
+    buckets and double-buffered index staging.
 """
 from __future__ import annotations
 
@@ -32,8 +42,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.executor import staged_uploads
 from repro.core.plan import (
+    DeviceTopology,
     ExecutionPlan,
+    even_range_bounds,
     plan_execution,
     pow2_ceil as _pow2_ceil,
     shard_col_bounds,
@@ -47,12 +60,14 @@ __all__ = [
     "distributed_tc_count",
     "make_tc_step",
     "ShardedColsExecutor",
+    "Sharded2DExecutor",
     "pooled_sharded_executor",
+    "pooled_sharded_2d_executor",
     "clear_sharded_executor_cache",
     "TC_PLACEMENTS",
 ]
 
-TC_PLACEMENTS = ("replicated", "sharded_cols")
+TC_PLACEMENTS = ("replicated", "sharded_cols", "sharded_2d")
 
 
 def shard_worklist(wl: Worklist, num_shards: int) -> tuple[np.ndarray, np.ndarray]:
@@ -155,6 +170,27 @@ def make_sharded_cols_step(mesh: Mesh, axis_names: tuple[str, ...]):
     )
 
 
+def _stripe_steps(stripes, num_shards: int, budget: int, longest: int):
+    """Yield per-step host ``(ridx, cidx)`` flat arrays over stripe windows.
+
+    Every step takes the same ``[start, start+need)`` window of each stripe
+    (lockstep across shards), padded with the ``-1`` no-op sentinel to the
+    window's pow2 bucket, then flattened shard-major so the flat
+    ``P(axis_names)`` sharding deals stripe ``s`` to mesh device ``s``.
+    """
+    for start in range(0, longest, budget):
+        need = min(budget, longest - start)
+        bucket = _pow2_ceil(need)  # ragged tail -> pow2 step bucket
+        ridx = np.full((num_shards, bucket), -1, dtype=np.int32)
+        cidx = np.full((num_shards, bucket), -1, dtype=np.int32)
+        for s, stripe in enumerate(stripes):
+            part_r = stripe.row_pos[start : start + need]
+            part_c = stripe.col_pos[start : start + need]
+            ridx[s, : len(part_r)] = part_r
+            cidx[s, : len(part_c)] = part_c
+        yield ridx.reshape(-1), cidx.reshape(-1)
+
+
 class ShardedColsExecutor:
     """Device-resident ``sharded_cols`` execute stage for one mesh.
 
@@ -172,14 +208,17 @@ class ShardedColsExecutor:
         mesh: Mesh,
         *,
         chunk_pairs: int = 1 << 20,
+        double_buffer: bool = True,
     ):
         self.mesh = mesh
         self.axis_names = tuple(mesh.axis_names)
         self.num_shards = int(np.prod(mesh.devices.shape))
         self.words_per_slice = int(sbf.words_per_slice)
         self.chunk_pairs = chunk_pairs
+        self.double_buffer = double_buffer
         per, padded = shard_col_bounds(len(sbf.col_slice_idx), self.num_shards)
         self.col_shard_rows = per
+        self.col_bounds = even_range_bounds(len(sbf.col_slice_idx), self.num_shards)
         col = np.asarray(sbf.col_slice_data)
         if padded != col.shape[0]:
             col = np.concatenate(
@@ -217,16 +256,23 @@ class ShardedColsExecutor:
 
     def count_plan(self, plan: ExecutionPlan) -> int:
         """Count an owner-grouped plan. One exact host sum at the end."""
+        if plan.placement != "sharded_cols":
+            raise ValueError(
+                f"plan placement {plan.placement!r} is not 'sharded_cols'"
+            )
         if plan.num_shards != self.num_shards:
             raise ValueError(
                 f"plan has {plan.num_shards} shards, mesh has {self.num_shards}"
             )
-        if plan.col_shard_rows != self.col_shard_rows:
+        if plan.col_shard_rows != self.col_shard_rows or (
+            plan.col_bounds is not None
+            and not np.array_equal(plan.col_bounds, self.col_bounds)
+        ):
             raise ValueError(
-                f"plan's shard-local coordinates assume {plan.col_shard_rows} "
-                f"rows/shard but this executor's store has "
-                f"{self.col_shard_rows}; the plan was built for a different "
-                "SBF or shard count"
+                "plan's shard-local coordinates assume different column "
+                f"ranges (rows/shard {plan.col_shard_rows} vs "
+                f"{self.col_shard_rows}); the plan was built for a different "
+                "SBF, shard count, or split"
             )
         budget = min(
             max(plan.chunk_pairs, 1), self.max_pairs_per_shard_step
@@ -234,25 +280,18 @@ class ShardedColsExecutor:
         longest = max((s.num_pairs for s in plan.stripes), default=0)
         if longest == 0:
             return 0
-        totals = []
-        for start in range(0, longest, budget):
-            need = min(budget, longest - start)
-            bucket = _pow2_ceil(need)  # ragged tail -> pow2 step bucket
-            ridx = np.full((self.num_shards, bucket), -1, dtype=np.int32)
-            cidx = np.full((self.num_shards, bucket), -1, dtype=np.int32)
-            for s, stripe in enumerate(plan.stripes):
-                part_r = stripe.row_pos[start : start + need]
-                part_c = stripe.col_pos[start : start + need]
-                ridx[s, : len(part_r)] = part_r
-                cidx[s, : len(part_c)] = part_c
-            totals.append(
-                self._step(
-                    self.row_store,
-                    self.col_store,
-                    jnp.asarray(ridx.reshape(-1)),
-                    jnp.asarray(cidx.reshape(-1)),
-                )
-            )
+        flat = NamedSharding(self.mesh, P(self.axis_names))
+        staged = staged_uploads(
+            _stripe_steps(plan.stripes, self.num_shards, budget, longest),
+            lambda rc: (
+                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
+            ),
+            double_buffer=self.double_buffer,
+        )
+        totals = [
+            self._step(self.row_store, self.col_store, ridx, cidx)
+            for ridx, cidx in staged
+        ]
         return sum(int(t) for t in totals)  # exact: Python ints
 
     def count(self, wl: Worklist) -> int:
@@ -260,10 +299,227 @@ class ShardedColsExecutor:
         return self.count_plan(self._plan(wl))
 
 
+def make_sharded_2d_step(mesh: Mesh, axis_names: tuple[str, ...]):
+    """The pjit'd step for ``sharded_2d`` placement on a 2-axis mesh.
+
+    Data layout: row store's dim 0 sharded over the FIRST mesh axis
+    (replicated over the second), column store's dim 0 sharded over the
+    SECOND axis (replicated over the first) — device ``(i, j)`` holds
+    exactly row block ``i`` and col block ``j``. Index stripes are sharded
+    over both axes flattened (stripe order is row-major ``i*C + j``, which
+    is the mesh's device order), carrying *block-local* coordinates on both
+    sides. Inside shard_map every device runs the fused mirror against only
+    its resident blocks — owner-compute, no all-gather — and one scalar
+    psum over both axes closes the step.
+    """
+    row_axis, col_axis = axis_names
+    row_spec = P(row_axis, None)
+    col_spec = P(col_axis, None)
+    flat = P(axis_names)
+
+    def step(row_block, col_block, row_idx, col_idx):
+        def local(row_block, col_block, r, c):
+            partial = gather_total_reference(row_block, col_block, r, c)
+            return jax.lax.psum(partial[None], axis_names)
+
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(row_spec, col_spec, flat, flat),
+            out_specs=P(),
+        )(row_block, col_block, row_idx, col_idx)[0]
+
+    return jax.jit(
+        step,
+        in_shardings=(
+            NamedSharding(mesh, row_spec),
+            NamedSharding(mesh, col_spec),
+            NamedSharding(mesh, flat),
+            NamedSharding(mesh, flat),
+        ),
+        out_shardings=NamedSharding(mesh, P()),
+    )
+
+
+def _range_block_store(
+    store: np.ndarray, bounds: np.ndarray, block_rows: int
+) -> np.ndarray:
+    """Repack contiguous ranges into equal zero-padded blocks.
+
+    Block ``s`` holds ``store[bounds[s]:bounds[s+1]]`` at offset
+    ``s * block_rows`` — the host layout whose dim-0 NamedSharding puts
+    range ``s`` (and only it) on shard ``s``. Zero rows are harmless: no
+    stripe index points at them, and ``popcount(0 & x) == 0``.
+    """
+    num_shards = len(bounds) - 1
+    out = np.zeros((num_shards * block_rows, store.shape[1]), store.dtype)
+    for s in range(num_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        out[s * block_rows : s * block_rows + (hi - lo)] = store[lo:hi]
+    return out
+
+
+class Sharded2DExecutor:
+    """Device-resident ``sharded_2d`` execute stage for one 2-axis mesh.
+
+    Both slice stores are genuinely ``NamedSharding``-sharded: device
+    ``(i, j)`` uploads (once) exactly its row range ``i`` and column range
+    ``j`` — the first placement where NEITHER store is replicated, so row
+    stores can exceed one device's memory. The ranges come from the
+    constructing plan's (typically pair-count-weighted) bounds; ``count``
+    re-plans any work list against those fixed bounds, so the stores never
+    re-upload. Scheduling reuses the replicated Executor's machinery: pow2
+    step buckets bound retraces, and index staging is double-buffered
+    (step i+1's upload in flight during step i's compute).
+    """
+
+    def __init__(
+        self,
+        sbf: SlicedBitmap,
+        mesh: Mesh,
+        plan: ExecutionPlan | None = None,
+        *,
+        chunk_pairs: int = 1 << 20,
+        double_buffer: bool = True,
+    ):
+        if mesh.devices.ndim != 2:
+            raise ValueError(
+                f"sharded_2d needs a 2-axis mesh, got {mesh.devices.ndim} "
+                f"axes {tuple(mesh.axis_names)}"
+            )
+        self.mesh = mesh
+        self.axis_names = tuple(mesh.axis_names)
+        self.grid = tuple(int(x) for x in mesh.devices.shape)
+        self.num_shards = self.grid[0] * self.grid[1]
+        self.words_per_slice = int(sbf.words_per_slice)
+        self.chunk_pairs = chunk_pairs
+        self.double_buffer = double_buffer
+        self._sbf = sbf
+        nrow = len(sbf.row_slice_idx)
+        ncol = len(sbf.col_slice_idx)
+        if plan is None:
+            # Worklist-independent fallback: even ranges on both axes. For
+            # balanced (weighted) ranges construct from a sharded_2d plan.
+            self.row_bounds = even_range_bounds(nrow, self.grid[0])
+            self.col_bounds = even_range_bounds(ncol, self.grid[1])
+        else:
+            if plan.placement != "sharded_2d" or plan.grid != self.grid:
+                raise ValueError(
+                    f"plan is {plan.placement!r} over grid {plan.grid}, "
+                    f"mesh is {self.grid[0]}x{self.grid[1]}"
+                )
+            self.row_bounds = np.asarray(plan.row_bounds, dtype=np.int64)
+            self.col_bounds = np.asarray(plan.col_bounds, dtype=np.int64)
+        self.row_shard_rows = _pow2_ceil(
+            max(int(np.diff(self.row_bounds).max(initial=0)), 1)
+        )
+        self.col_shard_rows = _pow2_ceil(
+            max(int(np.diff(self.col_bounds).max(initial=0)), 1)
+        )
+        row_axis, col_axis = self.axis_names
+        self.row_store = jax.device_put(
+            _range_block_store(
+                np.asarray(sbf.row_slice_data), self.row_bounds,
+                self.row_shard_rows,
+            ),
+            NamedSharding(mesh, P(row_axis, None)),
+        )
+        self.col_store = jax.device_put(
+            _range_block_store(
+                np.asarray(sbf.col_slice_data), self.col_bounds,
+                self.col_shard_rows,
+            ),
+            NamedSharding(mesh, P(col_axis, None)),
+        )
+        self._step = make_sharded_2d_step(mesh, self.axis_names)
+        # Per-step, per-block pair budget: the closing psum sums num_shards
+        # int32 partials, so the *global* per-step worst case must fit int32.
+        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
+        self.max_pairs_per_shard_step = safe // self.num_shards
+        if self.max_pairs_per_shard_step < 1:
+            raise ValueError(
+                f"words_per_slice={self.words_per_slice} x {self.num_shards} "
+                f"blocks cannot give every block even one int32-safe pair "
+                f"per step (INT32_SAFE_WORDS={INT32_SAFE_WORDS}); use a "
+                "smaller slice_bits or a smaller grid"
+            )
+
+    def _plan(self, wl: Worklist) -> ExecutionPlan:
+        """Plan a work list against this executor's FIXED store ranges."""
+        return plan_execution(
+            self._sbf,
+            wl,
+            DeviceTopology(num_devices=self.num_shards),
+            placement="sharded_2d",
+            grid=self.grid,
+            chunk_pairs=self.chunk_pairs,
+            row_bounds=self.row_bounds,
+            col_bounds=self.col_bounds,
+        )
+
+    def count_plan(self, plan: ExecutionPlan) -> int:
+        """Count an owner-grid plan. One exact host sum at the end."""
+        if plan.placement != "sharded_2d":
+            raise ValueError(
+                f"plan placement {plan.placement!r} is not 'sharded_2d'"
+            )
+        if plan.grid != self.grid:
+            raise ValueError(
+                f"plan grid {plan.grid} != mesh grid {self.grid}"
+            )
+        if not (
+            np.array_equal(plan.row_bounds, self.row_bounds)
+            and np.array_equal(plan.col_bounds, self.col_bounds)
+        ):
+            raise ValueError(
+                "plan's block-local coordinates assume different store "
+                "ranges than this executor's resident blocks; re-plan with "
+                "row_bounds/col_bounds pinned to the executor's (or use "
+                ".count, which does)"
+            )
+        budget = min(max(plan.chunk_pairs, 1), self.max_pairs_per_shard_step)
+        longest = max((s.num_pairs for s in plan.stripes), default=0)
+        if longest == 0:
+            return 0
+        flat = NamedSharding(self.mesh, P(self.axis_names))
+        staged = staged_uploads(
+            _stripe_steps(plan.stripes, self.num_shards, budget, longest),
+            lambda rc: (
+                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
+            ),
+            double_buffer=self.double_buffer,
+        )
+        totals = [
+            self._step(self.row_store, self.col_store, ridx, cidx)
+            for ridx, cidx in staged
+        ]
+        return sum(int(t) for t in totals)  # exact: Python ints
+
+    def count(self, wl: Worklist, plan: ExecutionPlan | None = None) -> int:
+        """Count a work list against the resident sharded stores.
+
+        A pre-built ``plan`` is used as-is when its ranges match the
+        resident blocks (skips re-planning); otherwise — e.g. a fresh
+        weighted plan for a new work list on a pooled executor — ``wl`` is
+        re-planned against the executor's FIXED bounds, trading a little
+        balance for keeping the uploaded shards and traced step.
+        """
+        if (
+            plan is not None
+            and plan.placement == "sharded_2d"
+            and plan.grid == self.grid
+            and np.array_equal(plan.row_bounds, self.row_bounds)
+            and np.array_equal(plan.col_bounds, self.col_bounds)
+        ):
+            return self.count_plan(plan)
+        return self.count_plan(self._plan(wl))
+
+
 # Bounded cache of sharded executors for the one-shot APIs, keyed by store
 # *content* (like core.executor.ExecutorPool) so repeated counts of the same
 # graph hit even though tcim_count* rebuilds the SBF object per call —
 # reusing the uploaded shards and the traced step instead of paying both.
+# Shared by the 1-D and 2-D executors (their key tuples cannot collide).
 _SHARDED_CACHE: collections.OrderedDict = collections.OrderedDict()
 _SHARDED_CACHE_MAX = 4
 
@@ -286,9 +542,40 @@ def pooled_sharded_executor(
     return ex
 
 
+def pooled_sharded_2d_executor(
+    sbf: SlicedBitmap,
+    mesh: Mesh,
+    plan: ExecutionPlan,
+    *,
+    chunk_pairs: int = 1 << 20,
+) -> Sharded2DExecutor:
+    """Cached ``Sharded2DExecutor`` for (store content, mesh, grid).
+
+    The bounds are deliberately NOT part of the key: a hit means the graph's
+    stores are already resident under some (earlier-planned) ranges, and
+    re-uploading both NamedSharding-sharded stores to chase a new work
+    list's slightly-better-balanced cuts costs far more than it saves —
+    callers route new work lists through ``count(wl, plan)``, which falls
+    back to the resident fixed bounds when the plan's ranges differ.
+    """
+    from repro.core.executor import sbf_content_key
+
+    key = (sbf_content_key(sbf), mesh, plan.grid, chunk_pairs)
+    entry = _SHARDED_CACHE.get(key)
+    if entry is not None:
+        _SHARDED_CACHE.move_to_end(key)
+        return entry
+    ex = Sharded2DExecutor(sbf, mesh, plan, chunk_pairs=chunk_pairs)
+    _SHARDED_CACHE[key] = ex
+    _SHARDED_CACHE.move_to_end(key)
+    while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
+        _SHARDED_CACHE.popitem(last=False)
+    return ex
+
+
 def clear_sharded_executor_cache() -> None:
     """Release every cached sharded executor (frees the NamedSharding-sharded
-    column stores — sharded graphs are exactly the ones big enough to care)."""
+    slice stores — sharded graphs are exactly the ones big enough to care)."""
     _SHARDED_CACHE.clear()
 
 
@@ -310,19 +597,38 @@ def distributed_tc_count(
 
     ``placement='sharded_cols'`` runs the column-sharded path instead: the
     column store is NamedSharding-sharded over the mesh and the work list is
-    owner-grouped per shard (see ``ShardedColsExecutor``). Long-lived callers
-    should construct the ShardedColsExecutor themselves and reuse it.
+    owner-grouped per shard (see ``ShardedColsExecutor``).
+    ``placement='sharded_2d'`` shards BOTH stores over a 2-axis mesh with
+    pair-count-weighted ranges (see ``Sharded2DExecutor``). Long-lived
+    callers should construct the executors themselves and reuse them.
 
     ``max_step_pairs`` additionally bounds the pairs per psum step below the
     int32-safety budget (the caller's memory bound, e.g. the engine's
-    ``chunk_pairs``). Both placements run the fused jnp mirror inside
+    ``chunk_pairs``). All placements run the fused jnp mirror inside
     shard_map — Executor modes don't apply here.
     """
     if placement not in TC_PLACEMENTS:
         raise ValueError(f"placement {placement!r} not in {TC_PLACEMENTS}")
+    chunk = max_step_pairs if max_step_pairs is not None else 1 << 20
     if placement == "sharded_cols":
-        chunk = max_step_pairs if max_step_pairs is not None else 1 << 20
         return pooled_sharded_executor(sbf, mesh, chunk_pairs=chunk).count(wl)
+    if placement == "sharded_2d":
+        grid = tuple(int(x) for x in mesh.devices.shape)
+        if len(grid) != 2:
+            raise ValueError(
+                f"placement 'sharded_2d' needs a 2-axis mesh, got "
+                f"{len(grid)} axes {tuple(mesh.axis_names)}"
+            )
+        plan = plan_execution(
+            sbf,
+            wl,
+            DeviceTopology(num_devices=grid[0] * grid[1]),
+            placement="sharded_2d",
+            grid=grid,
+            chunk_pairs=chunk,
+        )
+        ex = pooled_sharded_2d_executor(sbf, mesh, plan, chunk_pairs=chunk)
+        return ex.count(wl, plan)
     axis_names = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
     step = make_tc_step(mesh, axis_names)

@@ -16,7 +16,10 @@ from repro.core import (
     build_sbf,
     build_worklist,
     clamp_chunk_pairs,
+    even_range_bounds,
     plan_execution,
+    range_owners,
+    weighted_range_bounds,
 )
 from repro.core.sbf import SlicedBitmap
 from repro.graphs import build_graph, rmat
@@ -93,6 +96,140 @@ def test_sharded_stripes_partition_worklist(small_graph, shards):
     assert sorted(map(tuple, rebuilt)) == sorted(map(tuple, want))
 
 
+# ------------------------------------------------------------ sharded_2d plan
+
+
+def _rebuild_pairs_2d(plan):
+    """Global (row, col) pairs from a sharded_2d plan's block-local stripes."""
+    out = []
+    for s in plan.stripes:
+        assert s.shard == s.row_shard * plan.grid[1] + s.col_shard
+        assert s.row_pos.min(initial=0) >= 0 and s.col_pos.min(initial=0) >= 0
+        assert s.row_pos.max(initial=-1) < plan.row_shard_rows
+        assert s.col_pos.max(initial=-1) < plan.col_shard_rows
+        gr = s.row_pos.astype(np.int64) + plan.row_bounds[s.row_shard]
+        gc = s.col_pos.astype(np.int64) + plan.col_bounds[s.col_shard]
+        assert (gr < plan.row_bounds[s.row_shard + 1]).all()
+        assert (gc < plan.col_bounds[s.col_shard + 1]).all()
+        out.append(np.stack([gr, gc], axis=1))
+    return np.concatenate(out)
+
+
+def test_weighted_range_bounds_properties():
+    """Weighted cuts are a monotone exact partition, balanced to within one
+    record's weight, for arbitrary weight vectors (incl. empty/zero)."""
+    rng = np.random.default_rng(0)
+    for n, shards in [(0, 4), (1, 1), (3, 8), (100, 4), (1000, 7)]:
+        w = rng.integers(0, 50, n).astype(np.int64)
+        b = weighted_range_bounds(w, shards)
+        assert b.shape == (shards + 1,)
+        assert b[0] == 0 and b[-1] == n and (np.diff(b) >= 0).all()
+        if n and w.sum():
+            sums = [int(w[b[s]: b[s + 1]].sum()) for s in range(shards)]
+            # No range exceeds the ideal share by more than one record.
+            assert max(sums) <= -(-int(w.sum()) // shards) + int(w.max())
+        owners = range_owners(b, np.arange(n))
+        assert ((owners >= 0) & (owners < shards)).all()
+        for s in range(shards):
+            assert (owners[b[s]: b[s + 1]] == s).all()
+
+
+@pytest.mark.parametrize("grid", [(1, 4), (2, 2), (4, 2)])
+def test_sharded_2d_partition_exact_all_configs(grid):
+    """Satellite property test: across every tcim_graphs config, weighted
+    2-D partitioning is exact — stripe pair counts sum to the worklist
+    total and every pair lands in exactly one (row_owner, col_owner) block
+    with in-range block-local coordinates."""
+    from repro.configs.tcim_graphs import GRAPHS
+    from repro.data.graph_pipeline import load_graph
+
+    topo = DeviceTopology(num_devices=grid[0] * grid[1])
+    for name, cfg in GRAPHS.items():
+        _, sbf, wl = load_graph(cfg.scaled(0.02), 64)
+        plan = plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=grid
+        )
+        assert plan.placement == "sharded_2d" and plan.grid == grid
+        assert plan.split == "weighted"
+        assert plan.total_pairs == wl.num_pairs, name
+        assert sum(plan.stats["stripe_pairs"]) == wl.num_pairs, name
+        rebuilt = _rebuild_pairs_2d(plan)
+        want = np.stack(
+            [wl.pair_row_pos.astype(np.int64), wl.pair_col_pos.astype(np.int64)],
+            axis=1,
+        )
+        # Same multiset of (row, col) pairs, any order: exactly-once mapping.
+        assert sorted(map(tuple, rebuilt)) == sorted(map(tuple, want)), name
+
+
+def test_weighted_split_imbalance_regression():
+    """Satellite regression: on the degree-ordered bench graph the weighted
+    split pins plan.imbalance <= 1.25 on grids where the contiguous even
+    split gives >= 2x."""
+    from repro.configs.tcim_graphs import GRAPHS
+    from repro.data.graph_pipeline import load_graph
+
+    _, sbf, wl = load_graph(GRAPHS["ego-facebook"], 64)
+    for grid in [(1, 8), (2, 2), (4, 2)]:
+        topo = DeviceTopology(num_devices=grid[0] * grid[1])
+        even = plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=grid, split="even"
+        )
+        weighted = plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=grid, split="weighted"
+        )
+        assert even.imbalance >= 2.0, (grid, even.imbalance)
+        assert weighted.imbalance <= 1.25, (grid, weighted.imbalance)
+
+
+def test_sharded_2d_plan_validation(small_graph):
+    _, sbf, wl = small_graph
+    topo = DeviceTopology(num_devices=8)
+    with pytest.raises(ValueError, match="grid"):
+        plan_execution(sbf, wl, topo, placement="sharded_2d")
+    with pytest.raises(ValueError, match="sharded_2d"):
+        plan_execution(
+            sbf, wl, topo, placement="sharded_cols", split="weighted"
+        )
+    with pytest.raises(ValueError, match="num_shards"):
+        plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=(4, 2), num_shards=4
+        )
+    with pytest.raises(ValueError, match="split"):
+        plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=(4, 2), split="best"
+        )
+    with pytest.raises(ValueError, match="together"):
+        plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=(4, 2),
+            row_bounds=np.array([0, len(sbf.row_slice_idx)]),
+        )
+    with pytest.raises(ValueError, match="monotone"):
+        plan_execution(
+            sbf, wl, topo, placement="sharded_2d", grid=(1, 2),
+            row_bounds=np.array([0, 5]),  # wrong end for 1 row shard
+            col_bounds=even_range_bounds(len(sbf.col_slice_idx), 2),
+        )
+
+
+def test_sharded_2d_fixed_bounds_roundtrip(small_graph):
+    """Caller-pinned bounds reproduce the weighted plan's stripes exactly —
+    the executor's re-plan-new-worklists-against-resident-stores contract."""
+    _, sbf, wl = small_graph
+    topo = DeviceTopology(num_devices=8)
+    base = plan_execution(sbf, wl, topo, placement="sharded_2d", grid=(4, 2))
+    pinned = plan_execution(
+        sbf, wl, topo, placement="sharded_2d", grid=(4, 2),
+        row_bounds=base.row_bounds, col_bounds=base.col_bounds,
+    )
+    assert pinned.split == "fixed"
+    assert np.array_equal(pinned.row_bounds, base.row_bounds)
+    assert np.array_equal(pinned.col_bounds, base.col_bounds)
+    for a, b in zip(base.stripes, pinned.stripes):
+        np.testing.assert_array_equal(a.row_pos, b.row_pos)
+        np.testing.assert_array_equal(a.col_pos, b.col_pos)
+
+
 def test_auto_placement_thresholds(small_graph):
     _, sbf, wl = small_graph
     multi = DeviceTopology(num_devices=8)
@@ -101,6 +238,16 @@ def test_auto_placement_thresholds(small_graph):
     assert plan.placement == "replicated"
     # …and shards once the store exceeds the (here: forced) threshold.
     plan = plan_execution(sbf, wl, multi, placement="auto", shard_above_bytes=1)
+    assert plan.placement == "sharded_cols"
+    # A genuinely 2-D grid steers auto to the 2-D owner-grid placement…
+    plan = plan_execution(
+        sbf, wl, multi, placement="auto", shard_above_bytes=1, grid=(4, 2)
+    )
+    assert plan.placement == "sharded_2d"
+    # …but a degenerate grid (one axis) stays 1-D.
+    plan = plan_execution(
+        sbf, wl, multi, placement="auto", shard_above_bytes=1, grid=(8, 1)
+    )
     assert plan.placement == "sharded_cols"
     # Single device can never shard.
     single = DeviceTopology(num_devices=1)

@@ -15,11 +15,23 @@ For each bench graph it reports the steady-state execute time of
     pair-count-weighted ranges; the derived fields put the weighted split's
     per-block imbalance next to the even split's on the same grid, which is
     the planner claim the CI gate pins (weighted <= 1.25 where even shows
-    up to ~4-5x on these degree-ordered graphs).
+    up to ~4-5x on these degree-ordered graphs),
+  * ``sched/RxC``     — packed vs lockstep stripe scheduling on the
+    imbalanced fixed-bounds fixture (the even split's skewed blocks pinned
+    as caller bounds): wall-clock of a multi-step ``count_plan`` under each
+    policy plus both psum-step counts — the scheduler claim the CI gate
+    pins (packed <= lockstep, >= 30% fewer on the fixture),
+  * ``async/RxC``     — a 4-count serve loop with the final host readback
+    overlapped (``count_plan_async``, collect futures, then close) vs the
+    synchronous close after every count.
 
 On a CPU mesh the sharded paths mostly measure scheduling overhead — the
 point is the *scaling shape* (stripe/block imbalance, steps, psum count),
-which is what transfers to a real pod.
+which is what transfers to a real pod. In particular the packed scheduler
+optimizes *dispatch count*; its late steps can carry wide windows where
+drained shards' sentinel lanes still occupy the [S, bucket] index block, so
+on the largest CPU-mirror graphs the per-step gather work can outweigh the
+saved dispatches (tracked in ROADMAP: budget-aware packed widths).
 """
 from __future__ import annotations
 
@@ -33,7 +45,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from benchmarks.common import bench_graphs, emit  # noqa: E402
+from benchmarks.common import bench_graphs, emit, fixture_step_budget  # noqa: E402
 from repro.core import DeviceTopology, plan_execution  # noqa: E402
 from repro.distributed import distributed_tc_count  # noqa: E402
 from repro.distributed.tc import Sharded2DExecutor, ShardedColsExecutor  # noqa: E402
@@ -125,6 +137,60 @@ def run() -> None:
                 f"imbalance_weighted={plan_w.imbalance:.2f};"
                 f"imbalance_even={plan_e.imbalance:.2f};"
                 f"block_min={min(blocks)};block_max={max(blocks)}",
+            )
+            # Packed vs lockstep on the imbalanced fixed-bounds fixture:
+            # the even split's skewed blocks pinned as caller bounds, with a
+            # chunk budget small enough that the count is genuinely
+            # multi-step (~16 lockstep windows over the longest block).
+            budget = fixture_step_budget(
+                [s.num_pairs for s in plan_e.stripes], rows * cols
+            )
+            fixed = plan_execution(
+                sbf, wl, topo, placement="sharded_2d", grid=(rows, cols),
+                chunk_pairs=budget,
+                row_bounds=plan_e.row_bounds, col_bounds=plan_e.col_bounds,
+            )
+            ex_pack = Sharded2DExecutor(
+                sbf, mesh2, fixed, chunk_pairs=budget, schedule="packed"
+            )
+            ex_lock = Sharded2DExecutor(
+                sbf, mesh2, fixed, chunk_pairs=budget, schedule="lockstep"
+            )
+            got_pack = ex_pack.count_plan(fixed)
+            assert got_pack == ex_lock.count_plan(fixed) == oracle, (
+                name, rows, cols, got_pack, oracle,
+            )
+            steps_pack = ex_pack.stripe_schedule(fixed).num_steps
+            steps_lock = ex_lock.stripe_schedule(fixed).num_steps
+            us_pack = _time_host(lambda: ex_pack.count_plan(fixed))
+            us_lock = _time_host(lambda: ex_lock.count_plan(fixed))
+            emit(
+                f"bench_sharded/{name}/sched/{rows}x{cols}",
+                us_pack,
+                f"pairs={wl.num_pairs};budget={budget};"
+                f"imbalance_fixture={fixed.imbalance:.2f};"
+                f"steps_packed={steps_pack};steps_lockstep={steps_lock};"
+                f"lockstep_us={us_lock:.1f};"
+                f"lockstep_over_packed={us_lock / max(us_pack, 1e-9):.2f}x",
+            )
+            # Async close: a 4-count serve loop with the host readback of
+            # count i overlapped with the stripe assembly + uploads of
+            # count i+1, vs closing synchronously after every count.
+            def _serve_sync():
+                return [ex2.count_plan(plan_w) for _ in range(4)]
+
+            def _serve_async():
+                futs = [ex2.count_plan_async(plan_w) for _ in range(4)]
+                return [f.result() for f in futs]
+
+            assert _serve_async() == _serve_sync() == [oracle] * 4
+            us_async = _time_host(_serve_async)
+            us_sync = _time_host(_serve_sync)
+            emit(
+                f"bench_sharded/{name}/async/{rows}x{cols}",
+                us_async,
+                f"counts=4;sync_us={us_sync:.1f};"
+                f"sync_over_async={us_sync / max(us_async, 1e-9):.2f}x",
             )
 
 

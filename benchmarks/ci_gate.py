@@ -1,17 +1,28 @@
-"""CI bench gate: emit ``BENCH_ci.json`` and enforce the imbalance bound.
+"""CI bench gate: emit ``BENCH_ci.json``; enforce imbalance + step bounds.
 
 Runs the table5 smoke row (smallest bench graph, end-to-end with triangle
-counts asserted > 0) plus the planner's weighted-vs-even split imbalance on
-the degree-ordered bench graphs, writes everything to ``BENCH_ci.json``
-(uploaded as a CI artifact — the repo's bench trajectory), and exits
-nonzero if any weighted-split config exceeds ``IMBALANCE_GATE``:
+counts asserted > 0), the planner's weighted-vs-even split imbalance on the
+degree-ordered bench graphs, and the stripe scheduler's psum-step counts
+(packed vs lockstep) on the imbalanced fixed-bounds fixture, writes
+everything to ``BENCH_ci.json`` (uploaded as a CI artifact — the repo's
+bench trajectory), and exits nonzero on any gate violation:
 
     PYTHONPATH=src:. python benchmarks/ci_gate.py [out.json]
 
-The gate pins the tentpole claim of the 2-D sharded execute path: weighted
-(pair-count-balanced) ranges keep ``plan.imbalance`` <= 1.25 on the owner
-grids CI exercises, where the legacy contiguous even split shows 2-5x.
-Plan-only checks are pure numpy, so the gate runs in seconds on one device.
+Gates:
+  * **imbalance** — weighted (pair-count-balanced) ranges keep
+    ``plan.imbalance`` <= ``IMBALANCE_GATE`` on every owner grid CI
+    exercises, where the legacy contiguous even split shows 2-5x.
+  * **stripe steps** — the packed schedule never issues more psum steps
+    than lockstep on ANY gate config, and on the designated imbalanced
+    fixed-bounds fixture (``STEP_FIXTURE``: the even split's skewed blocks
+    re-planned as caller-pinned bounds) it issues at least
+    ``STEP_GATE_REDUCTION`` fewer. Counts are bit-identical across
+    policies (pinned by the distributed test suites); the gate pins the
+    dispatch count.
+
+Plan/schedule checks are pure numpy, so the gate runs in seconds on one
+device.
 """
 from __future__ import annotations
 
@@ -19,10 +30,43 @@ import json
 import sys
 
 IMBALANCE_GATE = 1.25
+STEP_GATE_REDUCTION = 0.30
 # Degree-ordered bench graphs small enough for a fast CI job.
 GATE_GRAPHS = ("ego-facebook", "email-enron")
 # (row_shards, col_shards) owner grids the gate checks, 1-D and 2-D.
 GATE_GRIDS = ((1, 4), (1, 8), (2, 2), (4, 2))
+# The imbalanced fixed-bounds fixture rows that must show the packed win:
+# even-split blocks on these grids are >= 2x imbalanced on ego-facebook.
+STEP_FIXTURE = ("ego-facebook", (4, 2))
+# Budget sizing: lockstep walks the longest stripe in ~this many windows.
+STEP_GATE_WINDOWS = 16
+
+
+def _stripe_step_row(name, grid, plan) -> dict:
+    """Packed-vs-lockstep psum step counts for one (graph, grid) plan."""
+    from benchmarks.common import fixture_step_budget
+    from repro.core import build_stripe_schedule
+
+    lens = [s.num_pairs for s in plan.stripes]
+    budget = fixture_step_budget(lens, plan.num_shards, STEP_GATE_WINDOWS)
+    lock = build_stripe_schedule(lens, budget, policy="lockstep")
+    pack = build_stripe_schedule(lens, budget, policy="packed")
+    assert lock.total_pairs == pack.total_pairs == plan.total_pairs
+    return {
+        "graph": name,
+        "grid": list(grid),
+        "split": plan.split,
+        "num_pairs": plan.total_pairs,
+        "imbalance": round(plan.imbalance, 4),
+        "budget": budget,
+        "steps_lockstep": lock.num_steps,
+        "steps_packed": pack.num_steps,
+        "reduction": round(
+            1.0 - pack.num_steps / max(lock.num_steps, 1), 4
+        ),
+        "lanes_lockstep": lock.total_lanes,
+        "lanes_packed": pack.total_lanes,
+    }
 
 
 def run(out_path: str = "BENCH_ci.json") -> int:
@@ -34,6 +78,7 @@ def run(out_path: str = "BENCH_ci.json") -> int:
     assert rows and rows[0]["triangles"] > 0, rows
 
     imbalance = []
+    stripe_steps = []
     for name, cfg, scaled, g, sbf, wl in bench_graphs(GATE_GRAPHS):
         for rows_s, cols_s in GATE_GRIDS:
             topo = DeviceTopology(num_devices=rows_s * cols_s)
@@ -53,16 +98,31 @@ def run(out_path: str = "BENCH_ci.json") -> int:
                     "imbalance_even": round(plans["even"].imbalance, 4),
                 }
             )
+            # The even split's skewed blocks, re-planned as caller-pinned
+            # (fixed) bounds — the exact shape a pooled executor serves when
+            # new work lists re-plan against resident stores.
+            fixed = plan_execution(
+                sbf, wl, topo, placement="sharded_2d", grid=(rows_s, cols_s),
+                row_bounds=plans["even"].row_bounds,
+                col_bounds=plans["even"].col_bounds,
+            )
+            assert fixed.split == "fixed"
+            stripe_steps.append(
+                _stripe_step_row(name, (rows_s, cols_s), fixed)
+            )
 
     payload = {
         "gate": IMBALANCE_GATE,
+        "step_gate_reduction": STEP_GATE_REDUCTION,
         "table5": rows,
         "imbalance": imbalance,
+        "stripe_steps": stripe_steps,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
     print(f"wrote {out_path}: {len(rows)} table5 rows, "
-          f"{len(imbalance)} imbalance configs")
+          f"{len(imbalance)} imbalance configs, "
+          f"{len(stripe_steps)} stripe-step configs")
 
     failures = [
         r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
@@ -74,11 +134,31 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"weighted={r['imbalance_weighted']:.2f} "
             f"even={r['imbalance_even']:.2f} (gate {IMBALANCE_GATE})"
         )
+
+    step_failures = []
+    for r in stripe_steps:
+        bad = r["steps_packed"] > r["steps_lockstep"]
+        if (r["graph"], tuple(r["grid"])) == STEP_FIXTURE:
+            bad = bad or r["reduction"] < STEP_GATE_REDUCTION
+        if bad:
+            step_failures.append(r)
+        status = "FAIL" if bad else "ok"
+        print(
+            f"  [{status}] steps {r['graph']} {r['grid'][0]}x{r['grid'][1]} "
+            f"({r['split']}, imb={r['imbalance']:.2f}): "
+            f"lockstep={r['steps_lockstep']} packed={r['steps_packed']} "
+            f"(-{100 * r['reduction']:.0f}%)"
+        )
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
-        return 1
-    print("imbalance gate passed")
-    return 0
+    else:
+        print("imbalance gate passed")
+    if step_failures:
+        print(f"stripe-step gate FAILED for {len(step_failures)} config(s)")
+    else:
+        print("stripe-step gate passed")
+    return 1 if failures or step_failures else 0
 
 
 if __name__ == "__main__":

@@ -31,6 +31,19 @@ def bench_graphs(names=None, slice_bits: int = 64):
         yield name, cfg, scaled, g, sbf, wl
 
 
+def fixture_step_budget(stripe_lens, num_shards: int, windows: int = 16) -> int:
+    """Per-step real-pair budget for the imbalanced fixed-bounds fixture.
+
+    Sized so the LOCKSTEP schedule walks the longest stripe in ~``windows``
+    windows (pow2 per-shard window x shard count) — shared by the bench
+    sweep and the CI stripe-step gate so both score the same fixture.
+    """
+    from repro.core.plan import pow2_ceil
+
+    longest = max((int(x) for x in stripe_lens), default=0)
+    return pow2_ceil(max(-(-longest // windows), 1)) * num_shards
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     """Required CSV row format: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}")

@@ -84,6 +84,40 @@ def main():
     print(f"  blocks: min={min(blocks)} max={max(blocks)} "
           f"imbalance={plan2.imbalance:.2f} (split={plan2.split})")
 
+    # Per-shard packed stripe scheduling: pin the EVEN split's skewed blocks
+    # as fixed bounds (the shape a pooled executor serves after re-planning
+    # a new work list against resident stores) and compare psum steps under
+    # a budget small enough that the count is genuinely multi-step.
+    plan_even = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=n_dev),
+        placement="sharded_2d", grid=(4, 2), split="even",
+    )
+    budget = 1 << 13
+    fixed = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=n_dev),
+        placement="sharded_2d", grid=(4, 2), chunk_pairs=budget,
+        row_bounds=plan_even.row_bounds, col_bounds=plan_even.col_bounds,
+    )
+    ex_fix = Sharded2DExecutor(sbf, mesh2, fixed, chunk_pairs=budget)
+    lock = Sharded2DExecutor(
+        sbf, mesh2, fixed, chunk_pairs=budget, schedule="lockstep"
+    )
+    got_fix = ex_fix.count_plan(fixed)
+    print(f"packed sched count = {got_fix}; "
+          f"{'OK' if got_fix == want else 'MISMATCH'}")
+    print(f"  fixture imbalance={fixed.imbalance:.2f}; psum steps: "
+          f"packed={ex_fix.stripe_schedule(fixed).num_steps} vs "
+          f"lockstep={lock.stripe_schedule(fixed).num_steps} "
+          f"(budget {budget} pairs/step)")
+
+    # Async close: dispatch both counts, then take both readbacks — the
+    # fleet-serving overlap (graph i's close hides behind graph i+1's
+    # stripe assembly and uploads).
+    futs = [ex_fix.count_plan_async(fixed), ex2.count_plan_async(plan2)]
+    got_async = [f.result() for f in futs]
+    print(f"async close   counts = {got_async}; "
+          f"{'OK' if got_async == [want, want] else 'MISMATCH'}")
+
 
 if __name__ == "__main__":
     main()

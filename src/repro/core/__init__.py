@@ -9,13 +9,17 @@ Public API:
     tcim_latency_energy             MRAM latency/energy analytical model
 """
 from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
-from repro.core.executor import EXECUTOR_MODES, Executor, ExecutorPool
+from repro.core.executor import CountFuture, EXECUTOR_MODES, Executor, ExecutorPool
 from repro.core.plan import (
     PLACEMENTS,
+    SCHEDULES,
     SPLITS,
     DeviceTopology,
     ExecutionPlan,
+    StripeSchedule,
+    StripeStep,
     WorkStripe,
+    build_stripe_schedule,
     balance_grid_bounds,
     bottleneck_range_bounds,
     clamp_chunk_pairs,
@@ -43,14 +47,19 @@ __all__ = [
     "build_sbf",
     "build_worklist",
     "sbf_stats",
+    "CountFuture",
     "Executor",
     "ExecutorPool",
     "EXECUTOR_MODES",
     "PLACEMENTS",
+    "SCHEDULES",
     "SPLITS",
     "DeviceTopology",
     "ExecutionPlan",
+    "StripeSchedule",
+    "StripeStep",
     "WorkStripe",
+    "build_stripe_schedule",
     "balance_grid_bounds",
     "bottleneck_range_bounds",
     "clamp_chunk_pairs",

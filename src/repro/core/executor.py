@@ -47,6 +47,11 @@ The Executor fixes all three:
     ``device_put`` staging costs host time; ``double_buffer=False`` keeps
     the upload-on-demand path for comparison (benchmarks) and as the
     semantics reference (tests assert bit-identical counts).
+  * **Async close.** ``count_async`` / ``execute_indices_async`` return a
+    ``CountFuture`` with every chunk step already dispatched but the final
+    host readback deferred to ``result()`` — fleet callers overlap graph
+    i's close with graph i+1's stripe assembly and uploads. ``count`` is
+    ``count_async(...).result()``, bit-identical.
 
 ``ExecutorPool`` sits above: a fleet serving many graphs gets one pooled
 Executor per graph, grouped by the trace key ``(words_per_slice, chunk
@@ -83,11 +88,51 @@ from repro.kernels import ops, ref
 from repro.kernels.common import on_cpu
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
-__all__ = ["Executor", "ExecutorPool", "EXECUTOR_MODES", "staged_uploads"]
+__all__ = [
+    "CountFuture",
+    "Executor",
+    "ExecutorPool",
+    "EXECUTOR_MODES",
+    "staged_uploads",
+]
 
 EXECUTOR_MODES = ("fused", "gather_then_kernel", "pallas_items", "jnp")
 
 _INT32_MAX = 2**31 - 1
+
+
+class CountFuture:
+    """A dispatched count whose host readback is deferred.
+
+    The ``count_async`` family returns one of these with every device step
+    already enqueued; ``result()`` performs the final host sync (summing the
+    per-step device scalars exactly, in Python ints) and caches it. Fleet
+    callers overlap the close with the next graph's work — dispatch graph
+    i+1's stripe assembly and index uploads while graph i's readback is
+    still in flight:
+
+        futures = [pool.count_async(sb, wl) for sb, wl in jobs]
+        counts = [f.result() for f in futures]
+
+    ``result()`` is idempotent, and ``count(...) ==
+    count_async(...).result()`` bit-identically on every path.
+    """
+
+    __slots__ = ("_totals", "_value")
+
+    def __init__(self, totals):
+        self._totals = list(totals)
+        self._value: int | None = None
+
+    def result(self) -> int:
+        if self._totals is not None:
+            totals = self._totals
+            if len(totals) > 1:
+                # One stacked device->host transfer, not one per step.
+                totals = np.asarray(jnp.stack(totals))
+            self._value = sum(int(t) for t in totals)  # exact: host ints
+            self._totals = None
+        return self._value
 
 
 def staged_uploads(chunks, put, *, double_buffer: bool = True):
@@ -256,28 +301,43 @@ class Executor:
             double_buffer=self.double_buffer,
         )
 
-    def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
-        """Count over explicit work-list index arrays. One host sync total."""
+    def execute_indices_async(
+        self, row_idx: np.ndarray, col_idx: np.ndarray
+    ) -> CountFuture:
+        """Dispatch a count over explicit index arrays; defer the host sync.
+
+        Every chunk step is enqueued before this returns; the returned
+        future's ``result()`` is the one host transfer. Empty work lists
+        dispatch nothing.
+        """
         p = len(row_idx)
         if p == 0:
-            return 0
+            return CountFuture([])
         # Worst case: every bit of every referenced slice set.
         if p * self.slice_bits <= _INT32_MAX:
             acc = jnp.int32(0)
             for ridx, cidx in self._device_chunks(row_idx, col_idx):
                 acc = self._chunk_jit(self.row_data, self.col_data, ridx, cidx, acc)
-            return int(acc)  # the single host transfer
+            return CountFuture([acc])
         # Huge work lists: int32 carry could overflow across chunks; keep
-        # per-chunk totals device-side, one stacked transfer, exact host sum.
+        # per-chunk totals device-side, exact host sum at close.
         totals = [
             self._chunk_jit(self.row_data, self.col_data, ridx, cidx, jnp.int32(0))
             for ridx, cidx in self._device_chunks(row_idx, col_idx)
         ]
-        return sum(int(t) for t in np.asarray(jnp.stack(totals)))
+        return CountFuture(totals)
+
+    def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
+        """Count over explicit work-list index arrays. One host sync total."""
+        return self.execute_indices_async(row_idx, col_idx).result()
+
+    def count_async(self, wl: sbf_mod.Worklist) -> CountFuture:
+        """``count`` with the final host readback deferred to ``result()``."""
+        return self.execute_indices_async(wl.pair_row_pos, wl.pair_col_pos)
 
     def count(self, wl: sbf_mod.Worklist) -> int:
         """Triangle contribution of a work list (Eq. 5 execute+reduce)."""
-        return self.execute_indices(wl.pair_row_pos, wl.pair_col_pos)
+        return self.count_async(wl).result()
 
     def modeled_hbm_bytes(self, num_pairs: int, *, fused: bool | None = None) -> int:
         """Modeled execute-stage HBM traffic for this store's word width."""
@@ -337,18 +397,26 @@ class ExecutorPool:
 
     @staticmethod
     def trace_key(
-        sb: sbf_mod.SlicedBitmap, *, mode: str = "fused", chunk_pairs: int = 1 << 20
+        sb: sbf_mod.SlicedBitmap,
+        *,
+        mode: str = "fused",
+        chunk_pairs: int = 1 << 20,
+        pad_stores_pow2: bool = True,
     ) -> tuple:
         """The (words_per_slice, chunk bucket, mode, store buckets) an
-        Executor traces under — equal keys share every chunk-step trace."""
+        Executor traces under — equal keys share every chunk-step trace.
+
+        ``pad_stores_pow2=False`` executors keep their exact store row
+        counts, so their traces are keyed by those exact shapes — the key
+        must report the same, or ``stats()`` overstates trace sharing.
+        """
         wps = int(sb.words_per_slice)
-        return (
-            wps,
-            clamp_chunk_pairs(chunk_pairs, wps),
-            mode,
-            _pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1)),
-            _pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1)),
-        )
+        rows = int(sb.row_slice_data.shape[0])
+        cols = int(sb.col_slice_data.shape[0])
+        if pad_stores_pow2:
+            rows = _pow2_ceil(max(rows, 1))
+            cols = _pow2_ceil(max(cols, 1))
+        return (wps, clamp_chunk_pairs(chunk_pairs, wps), mode, rows, cols)
 
     def get(
         self,
@@ -372,12 +440,50 @@ class ExecutorPool:
             return entry[1]
         self.misses += 1
         ex = Executor(sb, mode=mode, chunk_pairs=chunk_pairs, **executor_kwargs)
-        tkey = self.trace_key(sb, mode=mode, chunk_pairs=chunk_pairs)
+        tkey = self.trace_key(
+            sb,
+            mode=mode,
+            chunk_pairs=chunk_pairs,
+            pad_stores_pow2=executor_kwargs.get("pad_stores_pow2", True),
+        )
         self._entries[key] = (tkey, ex)
         self._entries.move_to_end(key)
         while len(self._entries) > self.max_graphs:
             self._entries.popitem(last=False)  # evict LRU graph + its stores
         return ex
+
+    def count_async(
+        self,
+        sb: sbf_mod.SlicedBitmap,
+        wl: sbf_mod.Worklist,
+        *,
+        mode: str = "fused",
+        chunk_pairs: int = 1 << 20,
+        **executor_kwargs,
+    ) -> CountFuture:
+        """Dispatch a count on the pooled executor for ``sb``; defer the sync.
+
+        The fleet-serving primitive: the returned future's readback can be
+        taken after the *next* graph's stripe assembly and uploads have been
+        dispatched, hiding the per-graph end sync behind useful host work.
+        """
+        return self.get(
+            sb, mode=mode, chunk_pairs=chunk_pairs, **executor_kwargs
+        ).count_async(wl)
+
+    def count(
+        self,
+        sb: sbf_mod.SlicedBitmap,
+        wl: sbf_mod.Worklist,
+        *,
+        mode: str = "fused",
+        chunk_pairs: int = 1 << 20,
+        **executor_kwargs,
+    ) -> int:
+        """Blocking convenience over ``count_async`` (identical counts)."""
+        return self.count_async(
+            sb, wl, mode=mode, chunk_pairs=chunk_pairs, **executor_kwargs
+        ).result()
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -28,12 +28,22 @@ given an SBF, a work list, and a device topology it decides
     stripe imbalance (``plan.imbalance``),
   * **chunking** — the pow2 chunk bucket all executors run (rounded down to
     the caller's memory bound and clamped so one chunk's worst-case count
-    provably fits the int32 accumulator).
+    provably fits the int32 accumulator),
+  * **stripe scheduling** — ``StripeSchedule`` turns a sharded plan's owner
+    stripes into per-psum-step index windows. The ``packed`` policy keeps
+    per-shard cursors and packs every shard's *remaining* pairs into every
+    step, so drained shards stop consuming the step budget and the step
+    count approaches ``ceil(total_pairs / budget)``; the ``lockstep``
+    policy (the legacy behaviour, kept as the comparison baseline) walks
+    all stripes over a shared ``[start, start + window)`` window, which
+    costs ``ceil(longest_stripe / window)`` steps — on imbalanced
+    fixed-bounds replans the near-empty shards idle through every window
+    of the longest one.
 
 Consumers: ``core.tcim`` routes ``tcim_count_graph(placement=...)`` through
 ``plan_execution``; ``distributed.tc`` turns a ``sharded_cols`` /
 ``sharded_2d`` plan into ``NamedSharding``-sharded stores plus per-shard
-stripes under ``shard_map``.
+stripes under ``shard_map``, scheduled by ``build_stripe_schedule``.
 """
 from __future__ import annotations
 
@@ -47,9 +57,13 @@ from repro.kernels.ops import INT32_SAFE_WORDS
 __all__ = [
     "PLACEMENTS",
     "SPLITS",
+    "SCHEDULES",
     "DeviceTopology",
     "WorkStripe",
     "ExecutionPlan",
+    "StripeStep",
+    "StripeSchedule",
+    "build_stripe_schedule",
     "plan_execution",
     "clamp_chunk_pairs",
     "pow2_ceil",
@@ -252,6 +266,176 @@ def balance_grid_bounds(
             np.add.at(by_col, (cp, row_owner), 1)
         col_bounds = bottleneck_range_bounds(by_col, cols)
     return best[1], best[2]
+
+
+# Requestable stripe scheduling policies for the sharded execute paths.
+SCHEDULES = ("packed", "lockstep")
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeStep:
+    """One psum step of a ``StripeSchedule``.
+
+    The step ships a ``[num_shards, bucket]`` index window (flattened
+    shard-major so the flat ``P(axis_names)`` sharding deals row ``s`` to
+    mesh device ``s``): shard ``s`` contributes its stripe's pairs
+    ``[starts[s], starts[s] + lens[s])`` in lanes ``[0, lens[s])`` of its
+    row, with every remaining lane padded by the ``-1`` no-op sentinel.
+    """
+
+    bucket: int  # pow2 row width of this step's [S, bucket] index window
+    starts: tuple[int, ...]  # per-shard stripe cursor at this step
+    lens: tuple[int, ...]  # per-shard real pairs this step (each <= bucket)
+
+    @property
+    def real_pairs(self) -> int:
+        """Non-sentinel pairs this step executes (the psum's work)."""
+        return sum(self.lens)
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeSchedule:
+    """Per-psum-step windows over a sharded plan's owner stripes.
+
+    ``budget`` bounds the **real** (non-sentinel) pairs per step. That is
+    the quantity both per-step costs scale with: the closing psum's
+    worst-case total (``real_pairs * words_per_slice * 32`` must fit int32)
+    and the gathered-operand traffic (each real pair reads two slices;
+    sentinel lanes are masked no-ops costing only 8 index bytes each, and
+    the index window itself stays bounded by ``num_shards *
+    pow2_ceil(budget)`` lanes). Buckets are pow2, so a schedule dispatches
+    at most ``log2(pow2_ceil(budget)) + 1`` distinct step shapes — the
+    executors' traced-step cache stays bounded exactly as before.
+
+    Policies (``SCHEDULES``):
+
+    * ``packed`` — per-shard cursors. Every step picks the widest window
+      ``w`` whose real pairs ``sum_s min(w, remaining_s)`` still fit the
+      budget, and every shard advances by its own ``min(w, remaining_s)``.
+      As shards drain they stop consuming the budget, so the survivors'
+      windows grow and the step count approaches the packing lower bound
+      ``ceil(total_pairs / budget)``. Never more steps than ``lockstep``:
+      the packed window is always >= the lockstep window (``budget //
+      num_shards`` is always budget-feasible), so every cursor advances at
+      least as fast.
+    * ``lockstep`` — the legacy shared ``[start, start + window)`` walk
+      with the fixed per-shard window ``budget // num_shards``; costs
+      ``ceil(longest_stripe / window)`` steps, every stripe padded to the
+      longest. Kept as the baseline benchmarks and the CI step gate
+      compare against.
+    """
+
+    policy: str  # "packed" | "lockstep"
+    num_shards: int
+    budget: int  # max real pairs per step (int32- and memory-bounded)
+    steps: tuple[StripeStep, ...]
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def total_pairs(self) -> int:
+        return sum(s.real_pairs for s in self.steps)
+
+    @property
+    def max_step_pairs(self) -> int:
+        """Worst per-step real-pair load (<= budget except the width-1 floor)."""
+        return max((s.real_pairs for s in self.steps), default=0)
+
+    @property
+    def total_lanes(self) -> int:
+        """Staged index lanes over the whole schedule, sentinels included —
+        the host->device index traffic is 8 bytes per lane."""
+        return sum(self.num_shards * s.bucket for s in self.steps)
+
+    def emit(self, stripes: tuple["WorkStripe", ...]):
+        """Yield per-step host ``(ridx, cidx)`` flat int32 arrays.
+
+        ``stripes`` must be the same owner stripes the schedule was built
+        from (one per shard, in shard order). Each yielded pair flattens
+        the ``[num_shards, bucket]`` window shard-major.
+        """
+        if len(stripes) != self.num_shards:
+            raise ValueError(
+                f"schedule built for {self.num_shards} stripes, got "
+                f"{len(stripes)}"
+            )
+        for step in self.steps:
+            ridx = np.full((self.num_shards, step.bucket), -1, dtype=np.int32)
+            cidx = np.full((self.num_shards, step.bucket), -1, dtype=np.int32)
+            for s, stripe in enumerate(stripes):
+                lo, n = step.starts[s], step.lens[s]
+                if n:
+                    ridx[s, :n] = stripe.row_pos[lo : lo + n]
+                    cidx[s, :n] = stripe.col_pos[lo : lo + n]
+            yield ridx.reshape(-1), cidx.reshape(-1)
+
+
+def _packed_window(remaining: list[int], budget: int) -> int:
+    """Widest per-shard window whose real pairs fit the step budget.
+
+    Largest ``w >= 1`` with ``sum_s min(w, remaining_s) <= budget`` (the sum
+    is monotone in ``w``, so binary search); floors at 1 so a step always
+    makes progress even when more shards are active than the budget covers.
+    """
+    lo, hi = 1, max(budget, 1)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if sum(min(mid, r) for r in remaining) <= budget:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def build_stripe_schedule(
+    stripe_lens, budget: int, *, policy: str = "packed"
+) -> StripeSchedule:
+    """Schedule per-shard stripe windows into psum steps (see StripeSchedule).
+
+    ``stripe_lens`` is the per-shard pair count (one entry per owner stripe,
+    in shard order); ``budget`` the max real pairs per step.
+    """
+    if policy not in SCHEDULES:
+        raise ValueError(f"schedule {policy!r} not in {SCHEDULES}")
+    lens = [int(x) for x in stripe_lens]
+    if any(n < 0 for n in lens):
+        raise ValueError(f"stripe lengths must be >= 0, got {lens}")
+    num_shards = len(lens)
+    budget = max(int(budget), 1)
+    steps: list[StripeStep] = []
+    if policy == "lockstep":
+        longest = max(lens, default=0)
+        window = max(budget // max(num_shards, 1), 1)
+        for start in range(0, longest, window):
+            need = min(window, longest - start)
+            steps.append(
+                StripeStep(
+                    bucket=pow2_ceil(need),
+                    starts=tuple(min(start, n) for n in lens),
+                    lens=tuple(min(max(n - start, 0), need) for n in lens),
+                )
+            )
+    else:  # packed
+        cursors = [0] * num_shards
+        remaining = lens[:]
+        while any(remaining):
+            w = _packed_window(remaining, budget)
+            step_lens = tuple(min(w, r) for r in remaining)
+            steps.append(
+                StripeStep(
+                    bucket=pow2_ceil(max(step_lens)),
+                    starts=tuple(cursors),
+                    lens=step_lens,
+                )
+            )
+            for s, n in enumerate(step_lens):
+                cursors[s] += n
+                remaining[s] -= n
+    return StripeSchedule(
+        policy=policy, num_shards=num_shards, budget=budget, steps=tuple(steps)
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,7 +38,7 @@ import numpy as np
 from repro.core import sbf as sbf_mod
 from repro.core.bitmat import bitpack_matrix
 from repro.core.executor import ExecutorPool
-from repro.core.plan import DeviceTopology, plan_execution
+from repro.core.plan import SCHEDULES, DeviceTopology, plan_execution
 from repro.graphs.csr import Graph, build_graph
 from repro.kernels import ops
 
@@ -94,6 +94,7 @@ def _execute_worklist(
     placement: str,
     mesh,
     pool: ExecutorPool | None,
+    schedule: str,
 ) -> tuple[int, str]:
     """Run the execute stage through the planner.
 
@@ -128,7 +129,9 @@ def _execute_worklist(
         # Imported here: core stays importable without the distributed layer.
         from repro.distributed.tc import pooled_sharded_2d_executor
 
-        ex = pooled_sharded_2d_executor(sb, mesh, plan, chunk_pairs=chunk_pairs)
+        ex = pooled_sharded_2d_executor(
+            sb, mesh, plan, chunk_pairs=chunk_pairs, schedule=schedule
+        )
         # count(wl, plan) falls back to the pooled executor's resident
         # bounds when the fresh plan's ranges differ — no store re-upload.
         return ex.count(wl, plan), plan.placement
@@ -140,7 +143,9 @@ def _execute_worklist(
             )
         from repro.distributed.tc import pooled_sharded_executor
 
-        ex = pooled_sharded_executor(sb, mesh, chunk_pairs=chunk_pairs)
+        ex = pooled_sharded_executor(
+            sb, mesh, chunk_pairs=chunk_pairs, schedule=schedule
+        )
         return ex.count_plan(plan), plan.placement
     if mesh is not None and topo.num_devices > 1:
         # Replicated over a real mesh: stores on every device, work-list
@@ -188,6 +193,7 @@ def tcim_count_graph(
     placement: str = "auto",
     mesh=None,
     pool: ExecutorPool | None = None,
+    schedule: str = "packed",
 ) -> TCResult:
     """Count triangles of a prebuilt (oriented) Graph.
 
@@ -207,10 +213,16 @@ def tcim_count_graph(
     default pool keeps recent graphs' stores device-resident; see
     ``default_executor_pool``, and
     ``repro.distributed.clear_sharded_executor_cache`` for the sharded
-    analogue).
+    analogue). ``schedule`` picks the sharded paths' stripe scheduling
+    policy — ``'packed'`` (default; per-shard window cursors, fewer psum
+    steps on imbalanced fixed-bounds replans) or ``'lockstep'`` (the legacy
+    shared-window baseline); single-stripe replicated execution is
+    unaffected. Counts are bit-identical across policies.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
     timings: dict[str, float] = {}
 
     if backend in ("bitgemm", "mxu"):
@@ -232,7 +244,7 @@ def tcim_count_graph(
 
     t0 = time.perf_counter()
     count, resolved = _execute_worklist(
-        sb, wl, backend, chunk_pairs, placement, mesh, pool
+        sb, wl, backend, chunk_pairs, placement, mesh, pool, schedule
     )
     timings["execute"] = time.perf_counter() - t0
 
@@ -253,6 +265,7 @@ def tcim_count(
     placement: str = "auto",
     mesh=None,
     pool: ExecutorPool | None = None,
+    schedule: str = "packed",
 ) -> TCResult:
     """End-to-end triangle count from a canonical undirected edge list."""
     t0 = time.perf_counter()
@@ -267,6 +280,7 @@ def tcim_count(
         placement=placement,
         mesh=mesh,
         pool=pool,
+        schedule=schedule,
     )
     res.timings_s = {"orient": t_orient, **res.timings_s}
     return res

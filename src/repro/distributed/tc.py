@@ -31,6 +31,16 @@ Slice data placement (chosen by ``core.plan.plan_execution``):
     lets row stores exceed one device's memory; ``Sharded2DExecutor`` is
     the device-resident unit, reusing the replicated Executor's pow2 step
     buckets and double-buffered index staging.
+
+Both sharded executors run their owner stripes through
+``core.plan.StripeSchedule`` (see ``_StripeScheduleDriver``): ``packed``
+per-shard window cursors by default — drained shards stop consuming the
+per-step pair budget, so imbalanced fixed-bounds replans take
+``~ceil(total/budget)`` psum steps instead of lockstep's
+``ceil(longest * num_shards / budget)`` — with the legacy ``lockstep``
+policy kept as the benchmark/CI baseline. ``count*_async`` variants defer
+the final host readback behind a ``CountFuture`` so fleet serving overlaps
+graph i's close with graph i+1's stripe assembly.
 """
 from __future__ import annotations
 
@@ -42,10 +52,13 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.executor import staged_uploads
+from repro.core.executor import CountFuture, staged_uploads
 from repro.core.plan import (
+    SCHEDULES,
     DeviceTopology,
     ExecutionPlan,
+    StripeSchedule,
+    build_stripe_schedule,
     even_range_bounds,
     plan_execution,
     pow2_ceil as _pow2_ceil,
@@ -170,36 +183,100 @@ def make_sharded_cols_step(mesh: Mesh, axis_names: tuple[str, ...]):
     )
 
 
-def _stripe_steps(stripes, num_shards: int, budget: int, longest: int):
-    """Yield per-step host ``(ridx, cidx)`` flat arrays over stripe windows.
+class _StripeScheduleDriver:
+    """Shared sharded execute driver: schedule -> staged uploads -> close.
 
-    Every step takes the same ``[start, start+need)`` window of each stripe
-    (lockstep across shards), padded with the ``-1`` no-op sentinel to the
-    window's pow2 bucket, then flattened shard-major so the flat
-    ``P(axis_names)`` sharding deals stripe ``s`` to mesh device ``s``.
+    Both sharded executors hold NamedSharding-resident ``row_store`` /
+    ``col_store`` arrays, a traced ``_step``, and plan validation
+    (``_check_plan``); this mixin owns everything placement-independent:
+
+    * **Stripe scheduling.** ``count_plan*`` runs the plan's owner stripes
+      through ``core.plan.build_stripe_schedule`` under the executor's
+      ``schedule`` policy (``packed`` by default — per-shard cursors, so a
+      drained shard stops consuming the step budget; ``lockstep`` keeps the
+      legacy shared-window baseline). The step budget is the caller's
+      memory bound AND the int32 psum bound: ``min(plan.chunk_pairs,
+      INT32_SAFE_WORDS // words_per_slice)`` **real pairs per step** —
+      NOT per shard, so a step never stages ``num_shards`` times the
+      caller's bound the way the pre-schedule driver did.
+    * **Async close.** ``count_plan_async`` returns a ``CountFuture`` with
+      every psum step dispatched through double-buffered index staging;
+      the final host readback happens at ``result()``, so fleet callers
+      overlap graph i's close with graph i+1's stripe assembly.
     """
-    for start in range(0, longest, budget):
-        need = min(budget, longest - start)
-        bucket = _pow2_ceil(need)  # ragged tail -> pow2 step bucket
-        ridx = np.full((num_shards, bucket), -1, dtype=np.int32)
-        cidx = np.full((num_shards, bucket), -1, dtype=np.int32)
-        for s, stripe in enumerate(stripes):
-            part_r = stripe.row_pos[start : start + need]
-            part_c = stripe.col_pos[start : start + need]
-            ridx[s, : len(part_r)] = part_r
-            cidx[s, : len(part_c)] = part_c
-        yield ridx.reshape(-1), cidx.reshape(-1)
+
+    def _validate_int32_floor(self, noun: str, remedy: str) -> None:
+        """Constructor guard: the packed scheduler's width-1 progress floor
+        can put one pair from EVERY shard in a step, so even that worst
+        case must fit the closing psum's int32 accumulator."""
+        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
+        if safe // self.num_shards < 1:
+            raise ValueError(
+                f"words_per_slice={self.words_per_slice} x {self.num_shards} "
+                f"{noun} cannot give every {noun.rstrip('s')} even one "
+                f"int32-safe pair per step (INT32_SAFE_WORDS="
+                f"{INT32_SAFE_WORDS}); use a smaller slice_bits or {remedy}"
+            )
+
+    def stripe_schedule(self, plan: ExecutionPlan) -> StripeSchedule:
+        """The schedule ``count_plan`` would run for this plan (inspectable:
+        benchmarks and the CI gate read ``num_steps`` off it).
+
+        The budget honors BOTH memory bounds — the plan's and the
+        executor's own ``chunk_pairs`` (a caller-built plan may carry a
+        larger chunk than this executor was configured for) — plus the
+        int32 psum bound.
+        """
+        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
+        budget = min(max(plan.chunk_pairs, 1), max(self.chunk_pairs, 1), safe)
+        return build_stripe_schedule(
+            [s.num_pairs for s in plan.stripes], budget, policy=self.schedule
+        )
+
+    def count_plan_async(self, plan: ExecutionPlan) -> CountFuture:
+        """Dispatch every scheduled psum step; defer the exact host sum."""
+        self._check_plan(plan)
+        sched = self.stripe_schedule(plan)
+        if sched.num_steps == 0:
+            return CountFuture([])  # empty worklist: nothing dispatched
+        flat = NamedSharding(self.mesh, P(self.axis_names))
+        staged = staged_uploads(
+            sched.emit(plan.stripes),
+            lambda rc: (
+                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
+            ),
+            double_buffer=self.double_buffer,
+        )
+        return CountFuture(
+            [
+                self._step(self.row_store, self.col_store, ridx, cidx)
+                for ridx, cidx in staged
+            ]
+        )
+
+    def count_plan(self, plan: ExecutionPlan) -> int:
+        """Count an owner-grouped plan. One exact host sum at the end."""
+        return self.count_plan_async(plan).result()
+
+    def count_async(self, wl: Worklist) -> CountFuture:
+        """``count`` with the final host readback deferred to ``result()``."""
+        return self.count_plan_async(self._plan(wl))
+
+    def count(self, wl: Worklist) -> int:
+        """Count a work list against the executor's resident stores."""
+        return self.count_async(wl).result()
 
 
-class ShardedColsExecutor:
+class ShardedColsExecutor(_StripeScheduleDriver):
     """Device-resident ``sharded_cols`` execute stage for one mesh.
 
     One Executor's worth of state per column-store shard: the shard's block
     of column slices stays resident on its device (uploaded once, verifiably
     sharded — see ``col_store.sharding``), the row store is replicated, and
     the traced step is shared across counts. ``count`` schedules any work
-    list through the planner's owner-grouped stripes; pow2 step buckets keep
-    retraces bounded exactly like ``core.executor.Executor``.
+    list through the planner's owner-grouped stripes under the ``schedule``
+    policy (see ``_StripeScheduleDriver``); pow2 step buckets keep retraces
+    bounded exactly like ``core.executor.Executor``.
     """
 
     def __init__(
@@ -209,7 +286,11 @@ class ShardedColsExecutor:
         *,
         chunk_pairs: int = 1 << 20,
         double_buffer: bool = True,
+        schedule: str = "packed",
     ):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
+        self.schedule = schedule
         self.mesh = mesh
         self.axis_names = tuple(mesh.axis_names)
         self.num_shards = int(np.prod(mesh.devices.shape))
@@ -233,17 +314,7 @@ class ShardedColsExecutor:
         )
         self._step = make_sharded_cols_step(mesh, self.axis_names)
         self._sbf = sbf
-        # Per-step, per-shard pair budget: the closing psum sums num_shards
-        # int32 partials, so the *global* per-step worst case must fit int32.
-        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
-        self.max_pairs_per_shard_step = safe // self.num_shards
-        if self.max_pairs_per_shard_step < 1:
-            raise ValueError(
-                f"words_per_slice={self.words_per_slice} x {self.num_shards} "
-                f"shards cannot give every shard even one int32-safe pair per "
-                f"step (INT32_SAFE_WORDS={INT32_SAFE_WORDS}); use a smaller "
-                "slice_bits or fewer shards"
-            )
+        self._validate_int32_floor("shards", "fewer shards")
 
     def _plan(self, wl: Worklist) -> ExecutionPlan:
         return plan_execution(
@@ -254,8 +325,7 @@ class ShardedColsExecutor:
             chunk_pairs=self.chunk_pairs,
         )
 
-    def count_plan(self, plan: ExecutionPlan) -> int:
-        """Count an owner-grouped plan. One exact host sum at the end."""
+    def _check_plan(self, plan: ExecutionPlan) -> None:
         if plan.placement != "sharded_cols":
             raise ValueError(
                 f"plan placement {plan.placement!r} is not 'sharded_cols'"
@@ -274,29 +344,6 @@ class ShardedColsExecutor:
                 f"{self.col_shard_rows}); the plan was built for a different "
                 "SBF, shard count, or split"
             )
-        budget = min(
-            max(plan.chunk_pairs, 1), self.max_pairs_per_shard_step
-        )
-        longest = max((s.num_pairs for s in plan.stripes), default=0)
-        if longest == 0:
-            return 0
-        flat = NamedSharding(self.mesh, P(self.axis_names))
-        staged = staged_uploads(
-            _stripe_steps(plan.stripes, self.num_shards, budget, longest),
-            lambda rc: (
-                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
-            ),
-            double_buffer=self.double_buffer,
-        )
-        totals = [
-            self._step(self.row_store, self.col_store, ridx, cidx)
-            for ridx, cidx in staged
-        ]
-        return sum(int(t) for t in totals)  # exact: Python ints
-
-    def count(self, wl: Worklist) -> int:
-        """Count a work list against the constructor SBF's sharded stores."""
-        return self.count_plan(self._plan(wl))
 
 
 def make_sharded_2d_step(mesh: Mesh, axis_names: tuple[str, ...]):
@@ -359,7 +406,7 @@ def _range_block_store(
     return out
 
 
-class Sharded2DExecutor:
+class Sharded2DExecutor(_StripeScheduleDriver):
     """Device-resident ``sharded_2d`` execute stage for one 2-axis mesh.
 
     Both slice stores are genuinely ``NamedSharding``-sharded: device
@@ -368,9 +415,11 @@ class Sharded2DExecutor:
     stores can exceed one device's memory. The ranges come from the
     constructing plan's (typically pair-count-weighted) bounds; ``count``
     re-plans any work list against those fixed bounds, so the stores never
-    re-upload. Scheduling reuses the replicated Executor's machinery: pow2
-    step buckets bound retraces, and index staging is double-buffered
-    (step i+1's upload in flight during step i's compute).
+    re-upload — which is exactly where blocks go imbalanced and the
+    ``packed`` stripe schedule (see ``_StripeScheduleDriver``) earns its
+    fewer psum steps. Pow2 step buckets bound retraces, and index staging
+    is double-buffered (step i+1's upload in flight during step i's
+    compute).
     """
 
     def __init__(
@@ -381,7 +430,11 @@ class Sharded2DExecutor:
         *,
         chunk_pairs: int = 1 << 20,
         double_buffer: bool = True,
+        schedule: str = "packed",
     ):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
+        self.schedule = schedule
         if mesh.devices.ndim != 2:
             raise ValueError(
                 f"sharded_2d needs a 2-axis mesh, got {mesh.devices.ndim} "
@@ -432,17 +485,7 @@ class Sharded2DExecutor:
             NamedSharding(mesh, P(col_axis, None)),
         )
         self._step = make_sharded_2d_step(mesh, self.axis_names)
-        # Per-step, per-block pair budget: the closing psum sums num_shards
-        # int32 partials, so the *global* per-step worst case must fit int32.
-        safe = INT32_SAFE_WORDS // max(self.words_per_slice, 1)
-        self.max_pairs_per_shard_step = safe // self.num_shards
-        if self.max_pairs_per_shard_step < 1:
-            raise ValueError(
-                f"words_per_slice={self.words_per_slice} x {self.num_shards} "
-                f"blocks cannot give every block even one int32-safe pair "
-                f"per step (INT32_SAFE_WORDS={INT32_SAFE_WORDS}); use a "
-                "smaller slice_bits or a smaller grid"
-            )
+        self._validate_int32_floor("blocks", "a smaller grid")
 
     def _plan(self, wl: Worklist) -> ExecutionPlan:
         """Plan a work list against this executor's FIXED store ranges."""
@@ -457,8 +500,7 @@ class Sharded2DExecutor:
             col_bounds=self.col_bounds,
         )
 
-    def count_plan(self, plan: ExecutionPlan) -> int:
-        """Count an owner-grid plan. One exact host sum at the end."""
+    def _check_plan(self, plan: ExecutionPlan) -> None:
         if plan.placement != "sharded_2d":
             raise ValueError(
                 f"plan placement {plan.placement!r} is not 'sharded_2d'"
@@ -477,23 +519,23 @@ class Sharded2DExecutor:
                 "row_bounds/col_bounds pinned to the executor's (or use "
                 ".count, which does)"
             )
-        budget = min(max(plan.chunk_pairs, 1), self.max_pairs_per_shard_step)
-        longest = max((s.num_pairs for s in plan.stripes), default=0)
-        if longest == 0:
-            return 0
-        flat = NamedSharding(self.mesh, P(self.axis_names))
-        staged = staged_uploads(
-            _stripe_steps(plan.stripes, self.num_shards, budget, longest),
-            lambda rc: (
-                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
-            ),
-            double_buffer=self.double_buffer,
+
+    def _plan_matches_bounds(self, plan: ExecutionPlan | None) -> bool:
+        return (
+            plan is not None
+            and plan.placement == "sharded_2d"
+            and plan.grid == self.grid
+            and np.array_equal(plan.row_bounds, self.row_bounds)
+            and np.array_equal(plan.col_bounds, self.col_bounds)
         )
-        totals = [
-            self._step(self.row_store, self.col_store, ridx, cidx)
-            for ridx, cidx in staged
-        ]
-        return sum(int(t) for t in totals)  # exact: Python ints
+
+    def count_async(
+        self, wl: Worklist, plan: ExecutionPlan | None = None
+    ) -> CountFuture:
+        """``count`` with the final host readback deferred to ``result()``."""
+        if self._plan_matches_bounds(plan):
+            return self.count_plan_async(plan)
+        return self.count_plan_async(self._plan(wl))
 
     def count(self, wl: Worklist, plan: ExecutionPlan | None = None) -> int:
         """Count a work list against the resident sharded stores.
@@ -504,15 +546,7 @@ class Sharded2DExecutor:
         re-planned against the executor's FIXED bounds, trading a little
         balance for keeping the uploaded shards and traced step.
         """
-        if (
-            plan is not None
-            and plan.placement == "sharded_2d"
-            and plan.grid == self.grid
-            and np.array_equal(plan.row_bounds, self.row_bounds)
-            and np.array_equal(plan.col_bounds, self.col_bounds)
-        ):
-            return self.count_plan(plan)
-        return self.count_plan(self._plan(wl))
+        return self.count_async(wl, plan).result()
 
 
 # Bounded cache of sharded executors for the one-shot APIs, keyed by store
@@ -525,16 +559,29 @@ _SHARDED_CACHE_MAX = 4
 
 
 def pooled_sharded_executor(
-    sbf: SlicedBitmap, mesh: Mesh, *, chunk_pairs: int = 1 << 20
+    sbf: SlicedBitmap,
+    mesh: Mesh,
+    *,
+    chunk_pairs: int = 1 << 20,
+    double_buffer: bool = True,
+    schedule: str = "packed",
 ) -> ShardedColsExecutor:
     from repro.core.executor import sbf_content_key
 
-    key = (sbf_content_key(sbf), mesh, chunk_pairs)
+    # EVERY config knob is part of the key — a pooled hit must never hand
+    # back an executor with different buffering or scheduling than requested.
+    key = (sbf_content_key(sbf), mesh, chunk_pairs, double_buffer, schedule)
     entry = _SHARDED_CACHE.get(key)
     if entry is not None:
         _SHARDED_CACHE.move_to_end(key)
         return entry
-    ex = ShardedColsExecutor(sbf, mesh, chunk_pairs=chunk_pairs)
+    ex = ShardedColsExecutor(
+        sbf,
+        mesh,
+        chunk_pairs=chunk_pairs,
+        double_buffer=double_buffer,
+        schedule=schedule,
+    )
     _SHARDED_CACHE[key] = ex
     _SHARDED_CACHE.move_to_end(key)
     while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
@@ -548,24 +595,38 @@ def pooled_sharded_2d_executor(
     plan: ExecutionPlan,
     *,
     chunk_pairs: int = 1 << 20,
+    double_buffer: bool = True,
+    schedule: str = "packed",
 ) -> Sharded2DExecutor:
-    """Cached ``Sharded2DExecutor`` for (store content, mesh, grid).
+    """Cached ``Sharded2DExecutor`` for (store content, mesh, grid, config).
 
     The bounds are deliberately NOT part of the key: a hit means the graph's
     stores are already resident under some (earlier-planned) ranges, and
     re-uploading both NamedSharding-sharded stores to chase a new work
     list's slightly-better-balanced cuts costs far more than it saves —
     callers route new work lists through ``count(wl, plan)``, which falls
-    back to the resident fixed bounds when the plan's ranges differ.
+    back to the resident fixed bounds when the plan's ranges differ. The
+    config knobs (``double_buffer``, ``schedule``) ARE keyed: they change
+    runtime behaviour, not the resident stores, and a hit must honor them.
     """
     from repro.core.executor import sbf_content_key
 
-    key = (sbf_content_key(sbf), mesh, plan.grid, chunk_pairs)
+    key = (
+        sbf_content_key(sbf), mesh, plan.grid, chunk_pairs, double_buffer,
+        schedule,
+    )
     entry = _SHARDED_CACHE.get(key)
     if entry is not None:
         _SHARDED_CACHE.move_to_end(key)
         return entry
-    ex = Sharded2DExecutor(sbf, mesh, plan, chunk_pairs=chunk_pairs)
+    ex = Sharded2DExecutor(
+        sbf,
+        mesh,
+        plan,
+        chunk_pairs=chunk_pairs,
+        double_buffer=double_buffer,
+        schedule=schedule,
+    )
     _SHARDED_CACHE[key] = ex
     _SHARDED_CACHE.move_to_end(key)
     while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
@@ -586,6 +647,7 @@ def distributed_tc_count(
     *,
     placement: str = "replicated",
     max_step_pairs: int | None = None,
+    schedule: str = "packed",
 ) -> int:
     """Execute the distributed count on an actual mesh (test/production path).
 
@@ -604,14 +666,21 @@ def distributed_tc_count(
 
     ``max_step_pairs`` additionally bounds the pairs per psum step below the
     int32-safety budget (the caller's memory bound, e.g. the engine's
-    ``chunk_pairs``). All placements run the fused jnp mirror inside
-    shard_map — Executor modes don't apply here.
+    ``chunk_pairs``). ``schedule`` picks the sharded paths' stripe
+    scheduling policy (``packed`` default / ``lockstep`` baseline; the
+    replicated path has a single stripe, so it does not apply there). All
+    placements run the fused jnp mirror inside shard_map — Executor modes
+    don't apply here.
     """
     if placement not in TC_PLACEMENTS:
         raise ValueError(f"placement {placement!r} not in {TC_PLACEMENTS}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
     chunk = max_step_pairs if max_step_pairs is not None else 1 << 20
     if placement == "sharded_cols":
-        return pooled_sharded_executor(sbf, mesh, chunk_pairs=chunk).count(wl)
+        return pooled_sharded_executor(
+            sbf, mesh, chunk_pairs=chunk, schedule=schedule
+        ).count(wl)
     if placement == "sharded_2d":
         grid = tuple(int(x) for x in mesh.devices.shape)
         if len(grid) != 2:
@@ -627,8 +696,14 @@ def distributed_tc_count(
             grid=grid,
             chunk_pairs=chunk,
         )
-        ex = pooled_sharded_2d_executor(sbf, mesh, plan, chunk_pairs=chunk)
+        ex = pooled_sharded_2d_executor(
+            sbf, mesh, plan, chunk_pairs=chunk, schedule=schedule
+        )
         return ex.count(wl, plan)
+    if wl.num_pairs == 0:
+        # Match the sharded paths' empty-schedule guard: nothing to count,
+        # so never pad, upload, or dispatch a psum step for it.
+        return 0
     axis_names = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
     step = make_tc_step(mesh, axis_names)

@@ -73,6 +73,25 @@ for name in GRAPHS:
     got = ex.count(wl)
     want = Executor(sbf, mode='jnp').count(wl)  # independent oracle backend
     assert got == want, (name, got, want)
+    assert ex.schedule == 'packed'  # the default policy serves every config
+    if name == 'ego-facebook':
+        # Packed (default) and lockstep schedules are bit-identical, sync
+        # or async, on a genuinely multi-step budget (~8 lockstep windows).
+        from repro.core.plan import pow2_ceil
+        assert ex.count_async(wl).result() == want
+        plan0 = ex._plan(wl)
+        longest = max(s.num_pairs for s in plan0.stripes)
+        chunk = pow2_ceil(max(-(-longest // 8), 1)) * 4
+        lock = ShardedColsExecutor(sbf, mesh, chunk_pairs=chunk,
+                                   schedule='lockstep')
+        pack = ShardedColsExecutor(sbf, mesh, chunk_pairs=chunk)
+        plan = pack._plan(wl)
+        sched_l = lock.stripe_schedule(plan)
+        sched_p = pack.stripe_schedule(plan)
+        assert sched_l.num_steps > 1  # genuinely multi-step
+        assert sched_p.num_steps <= sched_l.num_steps
+        assert sched_p.max_step_pairs <= chunk  # memory bound incl. shards
+        assert lock.count(wl) == pack.count(wl) == want
     # The engine API reaches the same path and count.
     res = tcim_count_graph(g, placement='sharded_cols', mesh=mesh,
                            collect_stats=False)
@@ -118,6 +137,24 @@ for name in GRAPHS:
     got = ex.count_plan(plan)
     want = Executor(sbf, mode='jnp').count(wl)  # independent oracle backend
     assert got == want, (name, got, want)
+    if name == 'ego-facebook':
+        # Packed vs lockstep schedules on a multi-step fixed-bounds replan
+        # (~8 lockstep windows): identical counts, packed never more psum
+        # steps, async == sync.
+        from repro.core.plan import pow2_ceil
+        assert ex.count_plan_async(plan).result() == want
+        longest = max(s.num_pairs for s in plan.stripes)
+        chunk = pow2_ceil(max(-(-longest // 8), 1)) * 8
+        lock = Sharded2DExecutor(sbf, mesh, plan, chunk_pairs=chunk,
+                                 schedule='lockstep')
+        pack = Sharded2DExecutor(sbf, mesh, plan, chunk_pairs=chunk)
+        small = pack._plan(wl)  # re-plan under the reduced budget
+        sched_l = lock.stripe_schedule(small)
+        sched_p = pack.stripe_schedule(small)
+        assert sched_l.num_steps > 1  # genuinely multi-step
+        assert sched_p.num_steps <= sched_l.num_steps
+        assert sched_p.max_step_pairs <= chunk
+        assert lock.count_plan(small) == pack.count_plan(small) == want
     # The engine API reaches the same path and count.
     res = tcim_count_graph(g, placement='sharded_2d', mesh=mesh,
                            collect_stats=False)
@@ -157,6 +194,26 @@ def test_sharded_2d_single_device_mesh():
     )
     assert buf.count_plan(plan) == ser.count_plan(plan) == want
     assert buf.count(wl) == want  # re-plan against the resident bounds
+    # Schedule policies are bit-identical here too, sync and async.
+    lock = Sharded2DExecutor(
+        sbf, mesh, plan, chunk_pairs=256, schedule="lockstep"
+    )
+    assert lock.count_plan(plan) == want
+    fut = buf.count_plan_async(plan)
+    assert fut.result() == want and fut.result() == want
+    assert buf.count_async(wl).result() == want
+    with pytest.raises(ValueError, match="schedule"):
+        Sharded2DExecutor(sbf, mesh, plan, schedule="best")
+    # A caller-built plan with matching bounds but a bigger chunk budget
+    # must still be clamped to THIS executor's memory bound.
+    big = plan_execution(
+        sbf, wl, topo, placement="sharded_2d", grid=(1, 1),
+        row_bounds=buf.row_bounds, col_bounds=buf.col_bounds,
+    )
+    assert big.chunk_pairs > 256
+    sched = buf.stripe_schedule(big)
+    assert sched.budget == 256 and sched.max_step_pairs <= 256
+    assert buf.count_plan(big) == want
     # A plan whose ranges differ from the resident blocks must be rejected,
     # not silently miscounted (here: a plan built for a different SBF).
     g2 = build_graph(rmat(300, 1500, seed=2))
@@ -179,6 +236,54 @@ def test_sharded_2d_single_device_mesh():
     p2 = pooled_sharded_2d_executor(sbf, mesh, plan)
     assert p1 is p2
     clear_sharded_executor_cache()
+
+
+def test_pooled_sharded_executor_config_not_aliased():
+    """Satellite regression: the pooled sharded caches dropped double_buffer
+    (and now schedule) from their keys, so a hit could hand back an executor
+    with different buffering than requested. Every config knob is keyed."""
+    import jax
+
+    from repro.core import DeviceTopology, build_sbf, build_worklist, plan_execution
+    from repro.distributed import (
+        pooled_sharded_2d_executor,
+        pooled_sharded_executor,
+    )
+    from repro.distributed.tc import clear_sharded_executor_cache
+    from repro.graphs import build_graph, rmat
+
+    g = build_graph(rmat(300, 1500, seed=4))
+    sbf = build_sbf(g, 64)
+    wl = build_worklist(g, sbf)
+    clear_sharded_executor_cache()
+    try:
+        mesh1 = jax.make_mesh((1,), ("d",))
+        e_buf = pooled_sharded_executor(sbf, mesh1)
+        e_ser = pooled_sharded_executor(sbf, mesh1, double_buffer=False)
+        e_lock = pooled_sharded_executor(sbf, mesh1, schedule="lockstep")
+        assert e_buf is not e_ser and e_buf is not e_lock
+        assert e_buf.double_buffer and not e_ser.double_buffer
+        assert e_buf.schedule == "packed" and e_lock.schedule == "lockstep"
+        # Repeat requests still hit their own entry.
+        assert pooled_sharded_executor(sbf, mesh1, double_buffer=False) is e_ser
+        assert pooled_sharded_executor(sbf, mesh1, schedule="lockstep") is e_lock
+
+        mesh2 = jax.make_mesh((1, 1), ("r", "c"))
+        plan = plan_execution(
+            sbf, wl, DeviceTopology(num_devices=1), placement="sharded_2d",
+            grid=(1, 1),
+        )
+        p_buf = pooled_sharded_2d_executor(sbf, mesh2, plan)
+        p_ser = pooled_sharded_2d_executor(sbf, mesh2, plan, double_buffer=False)
+        p_lock = pooled_sharded_2d_executor(sbf, mesh2, plan, schedule="lockstep")
+        assert p_buf is not p_ser and p_buf is not p_lock
+        assert not p_ser.double_buffer and p_lock.schedule == "lockstep"
+        assert (
+            pooled_sharded_2d_executor(sbf, mesh2, plan, double_buffer=False)
+            is p_ser
+        )
+    finally:
+        clear_sharded_executor_cache()
 
 
 def test_stripe_split_int32_boundary(monkeypatch):
@@ -222,12 +327,17 @@ def test_stripe_split_int32_boundary(monkeypatch):
     assert len(calls) == 2, len(calls)
 
 
-def test_distributed_empty_worklist():
-    """Satellite: empty work lists count zero on both placements."""
+def test_distributed_empty_worklist(monkeypatch):
+    """Satellite: empty work lists count zero on every placement WITHOUT
+    dispatching a psum step. The replicated path used to pad the empty list
+    to one pair per shard, upload it, and run a full step; it must now
+    early-return like the sharded paths' empty-schedule guard — asserted by
+    intercepting the step factory, which must never even be built."""
     import jax
 
     from repro.core import build_sbf, build_worklist
     from repro.distributed import distributed_tc_count
+    from repro.distributed import tc as dtc
     from repro.distributed.tc import _slice_worklist
     from repro.graphs import build_graph, rmat
 
@@ -235,8 +345,13 @@ def test_distributed_empty_worklist():
     sbf = build_sbf(g, 64)
     empty = _slice_worklist(build_worklist(g, sbf), 0, 0)
     assert empty.num_pairs == 0
+    built = []
+    monkeypatch.setattr(
+        dtc, "make_tc_step", lambda *a: built.append(a) or (lambda *_: 1)
+    )
     mesh = jax.make_mesh((1,), ("d",))
     assert distributed_tc_count(sbf, empty, mesh) == 0
+    assert built == []  # no step traced, no dispatch
     assert distributed_tc_count(sbf, empty, mesh, placement="sharded_cols") == 0
     mesh2 = jax.make_mesh((1, 1), ("r", "c"))
     assert distributed_tc_count(sbf, empty, mesh2, placement="sharded_2d") == 0

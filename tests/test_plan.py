@@ -14,6 +14,7 @@ from repro.core import (
     Executor,
     ExecutorPool,
     build_sbf,
+    build_stripe_schedule,
     build_worklist,
     clamp_chunk_pairs,
     even_range_bounds,
@@ -283,6 +284,136 @@ def test_executor_rejects_overflowing_words_per_slice():
         Executor(_fake_sbf(INT32_SAFE_WORDS + 1))
 
 
+# ------------------------------------------------------------- stripe schedule
+
+
+def _assert_schedule_covers(sched, lens):
+    """Every stripe consumed exactly once, in order, within the budget."""
+    cursors = [0] * len(lens)
+    for step in sched.steps:
+        assert step.bucket & (step.bucket - 1) == 0  # pow2 window width
+        assert max(step.lens, default=0) <= step.bucket
+        for s, n in enumerate(step.lens):
+            if n:
+                assert step.starts[s] == cursors[s], (s, step)
+                cursors[s] += n
+    assert cursors == [int(x) for x in lens], cursors
+    assert sched.total_pairs == sum(lens)
+
+
+def test_stripe_schedule_validation():
+    with pytest.raises(ValueError, match="schedule"):
+        build_stripe_schedule([1, 2], 8, policy="greedy")
+    with pytest.raises(ValueError, match=">= 0"):
+        build_stripe_schedule([1, -2], 8)
+    assert build_stripe_schedule([], 8).num_steps == 0
+    assert build_stripe_schedule([0, 0, 0], 8).num_steps == 0
+    assert build_stripe_schedule([0, 0], 8, policy="lockstep").num_steps == 0
+
+
+def test_stripe_schedule_lockstep_matches_legacy_windows():
+    """The lockstep policy reproduces the shared-window walk: per-shard
+    window = budget // num_shards, ceil(longest/window) steps, every stripe
+    sliced at the same [start, start+window) offsets."""
+    lens = [5, 17, 3]
+    sched = build_stripe_schedule(lens, budget=12, policy="lockstep")
+    # window = 12 // 3 = 4 -> ceil(17/4) = 5 steps.
+    assert sched.num_steps == 5
+    assert [s.starts for s in sched.steps] == [
+        (0, 0, 0), (4, 4, 3), (5, 8, 3), (5, 12, 3), (5, 16, 3)
+    ]
+    assert [s.lens for s in sched.steps] == [
+        (4, 4, 3), (1, 4, 0), (0, 4, 0), (0, 4, 0), (0, 1, 0)
+    ]
+    _assert_schedule_covers(sched, lens)
+
+
+def test_stripe_schedule_packed_respects_budget_and_covers():
+    """Property sweep: packed and lockstep both consume every stripe exactly
+    once; packed never exceeds the per-step real-pair budget (beyond the
+    width-1 progress floor) and never takes more steps than lockstep."""
+    rng = np.random.default_rng(7)
+    cases = [
+        ([0], 4), ([9], 4), ([1, 1, 1, 1], 1), ([1000, 0, 0, 0], 64),
+        ([3, 1000, 3, 3], 64),
+    ]
+    for _ in range(20):
+        n = int(rng.integers(1, 12))
+        lens = rng.integers(0, 300, n).tolist()
+        budget = int(rng.integers(1, 256))
+        cases.append((lens, budget))
+    for lens, budget in cases:
+        lock = build_stripe_schedule(lens, budget, policy="lockstep")
+        pack = build_stripe_schedule(lens, budget, policy="packed")
+        _assert_schedule_covers(lock, lens)
+        _assert_schedule_covers(pack, lens)
+        assert pack.num_steps <= lock.num_steps, (lens, budget)
+        active_floor = sum(1 for x in lens if x)  # width-1 floor worst case
+        for step in pack.steps:
+            assert step.real_pairs <= max(budget, active_floor), (lens, budget)
+
+
+def test_stripe_schedule_packed_reduces_steps_on_imbalanced_fixture():
+    """Acceptance fixture: one block holds 4x the pairs of the other seven
+    (a fixed-bounds replan shape). Packed drops the psum step count >= 30%
+    below lockstep — here 4x: drained shards stop consuming the budget."""
+    lens = [4096] + [512] * 7
+    lock = build_stripe_schedule(lens, 1024, policy="lockstep")
+    pack = build_stripe_schedule(lens, 1024, policy="packed")
+    assert lock.num_steps == 32  # ceil(4096 / (1024 // 8))
+    assert pack.num_steps == 8  # ~ceil(total / budget): the packing bound
+    assert pack.num_steps <= 0.7 * lock.num_steps
+    _assert_schedule_covers(pack, lens)
+
+
+def test_stripe_schedule_memory_bound_regression():
+    """Satellite regression: the pre-schedule driver used chunk_pairs as the
+    PER-SHARD window, staging num_shards * chunk real pairs per step. The
+    budget now bounds the step's total real pairs, shard count included."""
+    lens = [256] * 8
+    for policy in ("packed", "lockstep"):
+        sched = build_stripe_schedule(lens, 256, policy=policy)
+        assert sched.max_step_pairs <= 256, policy
+        # The old behaviour would have packed all 8 * 256 pairs in one step.
+        assert sched.num_steps >= 8, policy
+
+
+def test_stripe_schedule_emit_matches_stripes(small_graph):
+    """Emission contract: the flat per-step arrays are [S * bucket] int32,
+    sentinel-padded, and reassemble every owner stripe exactly — for both
+    policies, on a real owner-grouped plan."""
+    _, sbf, wl = small_graph
+    plan = plan_execution(
+        sbf,
+        wl,
+        DeviceTopology(num_devices=4),
+        placement="sharded_cols",
+        chunk_pairs=512,
+    )
+    lens = [s.num_pairs for s in plan.stripes]
+    for policy in ("packed", "lockstep"):
+        sched = build_stripe_schedule(lens, 512, policy=policy)
+        seen = [([], []) for _ in plan.stripes]
+        for (ridx, cidx), step in zip(sched.emit(plan.stripes), sched.steps):
+            assert ridx.dtype == np.int32 and cidx.dtype == np.int32
+            assert ridx.shape == cidx.shape == (4 * step.bucket,)
+            r2 = ridx.reshape(4, step.bucket)
+            c2 = cidx.reshape(4, step.bucket)
+            real = int((r2 >= 0).sum())
+            assert real == step.real_pairs
+            assert ((r2 >= 0) == (c2 >= 0)).all()
+            for s in range(4):
+                n = step.lens[s]
+                assert (r2[s, n:] == -1).all() and (c2[s, n:] == -1).all()
+                seen[s][0].extend(r2[s, :n].tolist())
+                seen[s][1].extend(c2[s, :n].tolist())
+        for s, stripe in enumerate(plan.stripes):
+            np.testing.assert_array_equal(seen[s][0], stripe.row_pos)
+            np.testing.assert_array_equal(seen[s][1], stripe.col_pos)
+    with pytest.raises(ValueError, match="stripes"):
+        next(build_stripe_schedule(lens, 512).emit(plan.stripes[:2]))
+
+
 # ------------------------------------------------------------------- executor
 
 
@@ -400,6 +531,50 @@ def test_pool_content_key_hits_across_rebuilt_sbf(small_graph):
     rebuilt = build_sbf(g, 64)
     assert rebuilt is not sbf
     assert pool.get(rebuilt) is pool.get(sbf)
+
+
+def test_pool_trace_key_honors_pad_stores_pow2():
+    """Satellite regression: with pad_stores_pow2=False the executor traces
+    on EXACT store shapes, so the trace key (and stats()) must report those
+    — not the pow2 buckets — or trace sharing is overstated."""
+    g1 = build_graph(rmat(400, 2500, seed=1))
+    g2 = build_graph(rmat(400, 2500, seed=7))
+    sbf1, sbf2 = build_sbf(g1, 64), build_sbf(g2, 64)
+    # Same pow2 bucket, different exact valid-slice counts.
+    assert sbf1.row_slice_data.shape[0] != sbf2.row_slice_data.shape[0]
+    assert ExecutorPool.trace_key(sbf1) == ExecutorPool.trace_key(sbf2)
+    k1 = ExecutorPool.trace_key(sbf1, pad_stores_pow2=False)
+    k2 = ExecutorPool.trace_key(sbf2, pad_stores_pow2=False)
+    assert k1 != k2
+    assert k1[-2:] == sbf1.row_slice_data.shape[:1] + sbf1.col_slice_data.shape[:1]
+    # stats() must see two trace groups for unpadded executors...
+    pool = ExecutorPool()
+    pool.get(sbf1, pad_stores_pow2=False)
+    pool.get(sbf2, pad_stores_pow2=False)
+    assert pool.stats()["trace_groups"] == 2
+    # ...where padded executors genuinely share one.
+    pool.clear()
+    pool.get(sbf1)
+    pool.get(sbf2)
+    assert pool.stats()["trace_groups"] == 1
+
+
+def test_count_async_matches_count(small_graph):
+    """count_async == count bit-identically (Executor + pool), the future
+    is idempotent, and empty work lists resolve to 0 with no dispatch."""
+    g, sbf, wl = small_graph
+    want = triangles_intersection(g)
+    ex = Executor(sbf, chunk_pairs=256)
+    fut = ex.count_async(wl)
+    assert fut.result() == want == ex.count(wl)
+    assert fut.result() == want  # idempotent
+    empty = np.zeros(0, np.int64)
+    assert ex.execute_indices_async(empty, empty).result() == 0
+    pool = ExecutorPool()
+    futures = [pool.count_async(sbf, wl) for _ in range(3)]  # overlap shape
+    assert [f.result() for f in futures] == [want] * 3
+    assert pool.count(sbf, wl) == want
+    assert len(pool) == 1  # all four counts hit one pooled executor
 
 
 def test_auto_placement_without_mesh_stays_replicated(small_graph):

@@ -2,10 +2,11 @@
 
 Runs the table5 smoke row (smallest bench graph, end-to-end with triangle
 counts asserted > 0), the planner's weighted-vs-even split imbalance on the
-degree-ordered bench graphs, and the stripe scheduler's psum-step counts
-(packed vs lockstep) on the imbalanced fixed-bounds fixture, writes
-everything to ``BENCH_ci.json`` (uploaded as a CI artifact — the repo's
-bench trajectory), and exits nonzero on any gate violation:
+degree-ordered bench graphs, the stripe scheduler's psum-step counts
+(packed vs lockstep) on the imbalanced fixed-bounds fixture, and the build
+front ends (host NumPy vs jitted device) side by side, writes everything to
+``BENCH_ci.json`` (uploaded as a CI artifact — the repo's bench
+trajectory), and exits nonzero on any gate violation:
 
     PYTHONPATH=src:. python benchmarks/ci_gate.py [out.json]
 
@@ -20,9 +21,13 @@ Gates:
     ``STEP_GATE_REDUCTION`` fewer. Counts are bit-identical across
     policies (pinned by the distributed test suites); the gate pins the
     dispatch count.
+  * **build parity** — the device build's worklist size and triangle count
+    equal the host build's on every gate graph (the ``build`` rows also
+    carry ``build_host_s``/``build_device_s`` per-stage timings so the
+    bench trajectory attributes wall-clock to the build front end).
 
-Plan/schedule checks are pure numpy, so the gate runs in seconds on one
-device.
+Plan/schedule checks are pure numpy and the build check is two small
+end-to-end counts, so the gate runs in seconds on one device.
 """
 from __future__ import annotations
 
@@ -69,6 +74,33 @@ def _stripe_step_row(name, grid, plan) -> dict:
     }
 
 
+def _build_row(name, g, wl) -> dict:
+    """Host-vs-device build timings + parity for one gate graph."""
+    from benchmarks.common import timer
+    from repro.core import build_sbf, build_worklist, device_build_graph
+    from repro.core.tcim import tcim_count_graph
+
+    device_build_graph(g, 64)  # warm: compile the build traces off the clock
+    with timer() as t_dev:
+        db = device_build_graph(g, 64)
+    with timer() as t_host:
+        sb_h = build_sbf(g, 64)
+        wl_h = build_worklist(g, sb_h)
+    res_h = tcim_count_graph(g, build="host", collect_stats=False)
+    res_d = tcim_count_graph(g, build="device", collect_stats=False)
+    return {
+        "graph": name,
+        "build_host_s": round(t_host.s, 4),
+        "build_device_s": round(t_dev.s, 4),
+        "pairs_host": wl_h.num_pairs,
+        "pairs_device": db.worklist.num_pairs,
+        "triangles_host": res_h.triangles,
+        "triangles_device": res_d.triangles,
+        "host_timings": {k: round(v, 4) for k, v in res_h.timings_s.items()},
+        "device_timings": {k: round(v, 4) for k, v in res_d.timings_s.items()},
+    }
+
+
 def run(out_path: str = "BENCH_ci.json") -> int:
     from benchmarks.common import bench_graphs
     from benchmarks.table5_runtime import run as table5_run
@@ -79,7 +111,9 @@ def run(out_path: str = "BENCH_ci.json") -> int:
 
     imbalance = []
     stripe_steps = []
+    build_rows = []
     for name, cfg, scaled, g, sbf, wl in bench_graphs(GATE_GRAPHS):
+        build_rows.append(_build_row(name, g, wl))
         for rows_s, cols_s in GATE_GRIDS:
             topo = DeviceTopology(num_devices=rows_s * cols_s)
             plans = {
@@ -117,12 +151,14 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         "table5": rows,
         "imbalance": imbalance,
         "stripe_steps": stripe_steps,
+        "build": build_rows,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
     print(f"wrote {out_path}: {len(rows)} table5 rows, "
           f"{len(imbalance)} imbalance configs, "
-          f"{len(stripe_steps)} stripe-step configs")
+          f"{len(stripe_steps)} stripe-step configs, "
+          f"{len(build_rows)} build configs")
 
     failures = [
         r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
@@ -150,6 +186,22 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"(-{100 * r['reduction']:.0f}%)"
         )
 
+    build_failures = []
+    for r in build_rows:
+        bad = (
+            r["pairs_host"] != r["pairs_device"]
+            or r["triangles_host"] != r["triangles_device"]
+        )
+        if bad:
+            build_failures.append(r)
+        status = "FAIL" if bad else "ok"
+        print(
+            f"  [{status}] build {r['graph']}: host={r['build_host_s']:.3f}s "
+            f"device={r['build_device_s']:.3f}s pairs "
+            f"{r['pairs_host']}/{r['pairs_device']} triangles "
+            f"{r['triangles_host']}/{r['triangles_device']}"
+        )
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
     else:
@@ -158,7 +210,11 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"stripe-step gate FAILED for {len(step_failures)} config(s)")
     else:
         print("stripe-step gate passed")
-    return 1 if failures or step_failures else 0
+    if build_failures:
+        print(f"build-parity gate FAILED for {len(build_failures)} config(s)")
+    else:
+        print("build-parity gate passed")
+    return 1 if failures or step_failures or build_failures else 0
 
 
 if __name__ == "__main__":

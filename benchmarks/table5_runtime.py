@@ -18,6 +18,10 @@ Columns reproduced:
   * exec_buffered_s / exec_serial_s — steady-state execute-stage time with
                  and without async double-buffering (chunk i+1's index
                  upload overlapping chunk i's kernel).
+  * build_host_s / build_device_s — the orient-free build front end
+                 (compress + schedule) on the host NumPy reference vs the
+                 jitted device build (core.build; warm traces — the steady
+                 state a fleet serves from), same bit-identical outputs.
   * sharded_s  — replicated-vs-sharded placement: the same count through
                  ``sharded_cols`` (column store NamedSharding-sharded over a
                  mesh of every visible device; nshards=1 in a single-device
@@ -29,7 +33,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import bench_graphs, emit, timer
-from repro.core import baselines
+from repro.core import baselines, build_sbf, build_worklist, device_build_graph
 from repro.core.cachesim import simulate_lru
 from repro.core.energymodel import PAPER_TABLE5, tcim_latency_energy
 from repro.core.executor import Executor
@@ -70,6 +74,14 @@ def run(names=None) -> list[dict]:
             res_s = tcim_count_graph(
                 g, placement="sharded_cols", mesh=mesh, collect_stats=False
             )
+        # Host vs device build front end (warm device traces: steady state).
+        db = device_build_graph(g, 64)
+        with timer() as t_bdev:
+            db = device_build_graph(g, 64)
+        with timer() as t_bhost:
+            sbf_h = build_sbf(g, 64)
+            wl_h = build_worklist(g, sbf_h)
+        assert db.worklist.num_pairs == wl_h.num_pairs, name
         assert res.triangles == tri_cpu == res_f.triangles == res_u.triangles, (
             name, res.triangles, tri_cpu, res_f.triangles, res_u.triangles)
         assert res.triangles == tri_buf == tri_ser == res_s.triangles, (
@@ -87,6 +99,7 @@ def run(names=None) -> list[dict]:
             f"exec_unfused_s={exec_u:.4f};hbm_fused={hbm_f};hbm_unfused={hbm_u};"
             f"exec_buffered_s={t_buf.s:.4f};exec_serial_s={t_ser.s:.4f};"
             f"sharded_s={t_sh.s:.3f};nshards={nshards};"
+            f"build_host_s={t_bhost.s:.4f};build_device_s={t_bdev.s:.4f};"
             f"speedup_cpu_over_tcim={t_cpu.s / max(tcim_s, 1e-12):.1f};"
             f"paper_cpu={paper[0]};paper_gpu={paper[1]};paper_fpga={paper[2]};"
             f"paper_wo_pim={paper[3]};paper_tcim={paper[4]}"
@@ -110,6 +123,8 @@ def run(names=None) -> list[dict]:
                 "exec_serial_s": t_ser.s,
                 "sharded_s": t_sh.s,
                 "nshards": nshards,
+                "build_host_s": t_bhost.s,
+                "build_device_s": t_bdev.s,
                 "paper": paper,
             }
         )

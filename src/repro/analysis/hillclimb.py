@@ -198,8 +198,7 @@ def cell_b():
 def cell_c():
     """TCIM distributed — the paper's technique; measured wall-clock on CPU
     (execute stage) + dry-run terms for the 512-chip mesh."""
-    from repro.core import build_sbf, build_worklist
-    from repro.core.tcim import _execute_worklist
+    from repro.core import Executor, build_sbf, build_worklist
     from repro.graphs import build_graph, rmat
 
     recs = []
@@ -209,8 +208,9 @@ def cell_c():
     wl = build_worklist(g, sbf)
 
     def timed_execute(wl_local, chunk):
+        ex = Executor(sbf, mode="jnp", chunk_pairs=chunk)
         t0 = time.perf_counter()
-        n = _execute_worklist(sbf, wl_local, "jnp", chunk)
+        n = ex.count(wl_local)
         return n, time.perf_counter() - t0
 
     # Baseline: work list in row-major (edge) order, chunk 1M.

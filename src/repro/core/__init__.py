@@ -29,7 +29,25 @@ from repro.core.plan import (
     weighted_range_bounds,
 )
 from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
-from repro.core.tcim import BACKENDS, TCResult, tcim_count, tcim_count_graph
+from repro.core.build import (
+    DeviceBuild,
+    DeviceBuildFuture,
+    DeviceWorklist,
+    device_build,
+    device_build_async,
+    device_build_graph,
+    device_build_sbf,
+    device_build_worklist,
+    device_build_trace_counts,
+)
+from repro.core.tcim import (
+    BACKENDS,
+    BUILDS,
+    TCFuture,
+    TCResult,
+    tcim_count,
+    tcim_count_graph,
+)
 from repro.core.cachesim import CacheStats, simulate_lru
 from repro.core.energymodel import (
     MramConstants,
@@ -67,7 +85,18 @@ __all__ = [
     "plan_execution",
     "range_owners",
     "weighted_range_bounds",
+    "DeviceBuild",
+    "DeviceBuildFuture",
+    "DeviceWorklist",
+    "device_build",
+    "device_build_async",
+    "device_build_graph",
+    "device_build_sbf",
+    "device_build_worklist",
+    "device_build_trace_counts",
     "BACKENDS",
+    "BUILDS",
+    "TCFuture",
     "TCResult",
     "tcim_count",
     "tcim_count_graph",

@@ -171,17 +171,45 @@ def _pad_rows_pow2(a: np.ndarray) -> np.ndarray:
     )
 
 
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _resident_window(a, start, size: int, bucket: int):
+    """Window of a device-resident index array, padded to its pow2 bucket
+    with the ``-1`` no-op sentinel. The start offset is a *traced* operand
+    (``dynamic_slice``), so every chunk of a multi-chunk worklist shares
+    one compiled program per (shape, size) instead of one per position;
+    only size/bucket — pow2, hence bounded in variety — key new traces.
+    Jitted: an eager ``a[start:stop]`` would stage its start index through
+    an implicit host->device transfer."""
+    w = jax.lax.dynamic_slice_in_dim(a, start, size)
+    if bucket != size:
+        w = jnp.pad(w, (0, bucket - size), constant_values=-1)
+    return w.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _resident_pad_rows(a, bucket: int):
+    """Zero-pad a device store's rows to ``bucket`` without a host bounce."""
+    pad = ((0, bucket - a.shape[0]),) + ((0, 0),) * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
 @functools.lru_cache(maxsize=None)
 def _chunk_step_fn(
     mode: str,
     interpret: bool | None,
     use_kernel: bool | None,
-    donate: bool,
+    donate: str,
     block_pairs: int | None = None,
 ):
     """Module-level jitted chunk step, shared by every Executor with the same
     config — one-shot API calls (tcim_count per graph) amortize traces and
     compiles across Executor instances instead of retracing per construction.
+
+    ``donate`` picks the donation set: ``'all'`` (indices + accumulator —
+    the host staging path, whose per-chunk index buffers are dead after the
+    step), ``'acc'`` (accumulator only — the device-resident index path,
+    whose index windows may be re-executed from a pooled worklist), or
+    ``'none'`` (CPU, which ignores donation and warns about it).
     """
 
     def chunk_total(row_data, col_data, ridx, cidx):
@@ -208,7 +236,8 @@ def _chunk_step_fn(
     def step(row_data, col_data, ridx, cidx, acc):
         return acc + chunk_total(row_data, col_data, ridx, cidx)
 
-    return jax.jit(step, donate_argnums=(2, 3, 4) if donate else ())
+    argnums = {"none": (), "acc": (4,), "all": (2, 3, 4)}[donate]
+    return jax.jit(step, donate_argnums=argnums)
 
 
 class Executor:
@@ -244,18 +273,35 @@ class Executor:
         self.chunk_pairs = clamp_chunk_pairs(chunk_pairs, self.words_per_slice)
         # Stores go to the device once and stay resident across counts,
         # row-bucketed to pow2 so same-bucket graphs share chunk-step traces.
-        row_store = np.asarray(sb.row_slice_data)
-        col_store = np.asarray(sb.col_slice_data)
-        if pad_stores_pow2:
-            row_store = _pad_rows_pow2(row_store)
-            col_store = _pad_rows_pow2(col_store)
-        self.row_data = jnp.asarray(row_store)
-        self.col_data = jnp.asarray(col_store)
-        # CPU ignores donation (and warns about it); donate elsewhere.
+        # Device-built SBFs (core.build) arrive as jax arrays already in
+        # that layout — adopt them as-is, without a host bounce.
+        self.row_data = self._adopt_store(sb.row_slice_data, pad_stores_pow2)
+        self.col_data = self._adopt_store(sb.col_slice_data, pad_stores_pow2)
+        # CPU ignores donation (and warns about it); donate elsewhere. The
+        # resident-index path never donates its index windows (a pooled
+        # device worklist may be counted again).
         self._chunk_jit = _chunk_step_fn(
-            mode, interpret, use_kernel, donate=not on_cpu(),
+            mode, interpret, use_kernel,
+            donate="none" if on_cpu() else "all",
             block_pairs=block_pairs,
         )
+        self._chunk_jit_resident = _chunk_step_fn(
+            mode, interpret, use_kernel,
+            donate="none" if on_cpu() else "acc",
+            block_pairs=block_pairs,
+        )
+
+    @staticmethod
+    def _adopt_store(store, pad_stores_pow2: bool):
+        if isinstance(store, np.ndarray):
+            if pad_stores_pow2:
+                store = _pad_rows_pow2(store)
+            return jnp.asarray(store)
+        rows = int(store.shape[0])
+        bucket = _pow2_ceil(max(rows, 1))
+        if bucket != rows:  # device builds are pre-bucketed; pad stragglers
+            store = _resident_pad_rows(store, bucket)
+        return store
 
     # ---------------------------------------------------------------- public
 
@@ -266,9 +312,14 @@ class Executor:
         Shared across Executors with identical config, so regression tests
         should assert on deltas around a count, not absolute values. Reads a
         private jax API; returns -1 (tests skip) if a jax upgrade removes it.
+        Covers both the host-staging and device-resident chunk steps (one
+        object on CPU, where neither donates).
         """
         try:
-            return int(self._chunk_jit._cache_size())
+            total = int(self._chunk_jit._cache_size())
+            if self._chunk_jit_resident is not self._chunk_jit:
+                total += int(self._chunk_jit_resident._cache_size())
+            return total
         except Exception:
             return -1
 
@@ -301,41 +352,84 @@ class Executor:
             double_buffer=self.double_buffer,
         )
 
+    def _resident_chunks(self, row_idx, col_idx):
+        """Pow2 chunk windows of device-resident index arrays (no staging —
+        the indices are already on device; windows are jitted static slices)."""
+        p = int(row_idx.shape[0])
+        c = self.chunk_pairs
+        if p <= c and p == _pow2_ceil(p) and row_idx.dtype == jnp.int32:
+            # The common device-worklist shape (one pow2 bucket): no copy.
+            yield row_idx, col_idx
+            return
+        for start in range(0, p, c):
+            size = min(c, p - start)
+            bucket = _pow2_ceil(size)
+            yield (
+                _resident_window(row_idx, start, size, bucket),
+                _resident_window(col_idx, start, size, bucket),
+            )
+
+    def _accumulate(self, device_chunks, step, worst_pairs: int) -> CountFuture:
+        """Dispatch every chunk step; defer the host sync to the future."""
+        # Worst case: every bit of every referenced slice set.
+        if worst_pairs * self.slice_bits <= _INT32_MAX:
+            acc = jnp.int32(0)
+            for ridx, cidx in device_chunks:
+                acc = step(self.row_data, self.col_data, ridx, cidx, acc)
+            return CountFuture([acc])
+        # Huge work lists: int32 carry could overflow across chunks; keep
+        # per-chunk totals device-side, exact host sum at close.
+        return CountFuture(
+            [
+                step(self.row_data, self.col_data, ridx, cidx, jnp.int32(0))
+                for ridx, cidx in device_chunks
+            ]
+        )
+
     def execute_indices_async(
-        self, row_idx: np.ndarray, col_idx: np.ndarray
+        self, row_idx, col_idx, *, num_real: int | None = None
     ) -> CountFuture:
         """Dispatch a count over explicit index arrays; defer the host sync.
 
         Every chunk step is enqueued before this returns; the returned
         future's ``result()`` is the one host transfer. Empty work lists
-        dispatch nothing.
+        dispatch nothing. The arrays may be host numpy (staged to the device
+        chunk by chunk, double-buffered) or device-resident jax arrays
+        (``core.build``'s worklists: chunked by static slicing, zero host
+        bounces). ``num_real`` tightens the int32-overflow bound for padded
+        device arrays whose real (non-sentinel) pair count is known.
         """
         p = len(row_idx)
-        if p == 0:
+        if p == 0 or num_real == 0:
             return CountFuture([])
-        # Worst case: every bit of every referenced slice set.
-        if p * self.slice_bits <= _INT32_MAX:
-            acc = jnp.int32(0)
-            for ridx, cidx in self._device_chunks(row_idx, col_idx):
-                acc = self._chunk_jit(self.row_data, self.col_data, ridx, cidx, acc)
-            return CountFuture([acc])
-        # Huge work lists: int32 carry could overflow across chunks; keep
-        # per-chunk totals device-side, exact host sum at close.
-        totals = [
-            self._chunk_jit(self.row_data, self.col_data, ridx, cidx, jnp.int32(0))
-            for ridx, cidx in self._device_chunks(row_idx, col_idx)
-        ]
-        return CountFuture(totals)
+        if isinstance(row_idx, jax.Array):
+            return self._accumulate(
+                self._resident_chunks(row_idx, col_idx),
+                self._chunk_jit_resident,
+                num_real if num_real is not None else p,
+            )
+        return self._accumulate(
+            self._device_chunks(row_idx, col_idx), self._chunk_jit, p
+        )
 
-    def execute_indices(self, row_idx: np.ndarray, col_idx: np.ndarray) -> int:
+    def execute_indices(
+        self, row_idx, col_idx, *, num_real: int | None = None
+    ) -> int:
         """Count over explicit work-list index arrays. One host sync total."""
-        return self.execute_indices_async(row_idx, col_idx).result()
+        return self.execute_indices_async(row_idx, col_idx, num_real=num_real).result()
 
-    def count_async(self, wl: sbf_mod.Worklist) -> CountFuture:
-        """``count`` with the final host readback deferred to ``result()``."""
-        return self.execute_indices_async(wl.pair_row_pos, wl.pair_col_pos)
+    def count_async(self, wl) -> CountFuture:
+        """``count`` with the final host readback deferred to ``result()``.
 
-    def count(self, wl: sbf_mod.Worklist) -> int:
+        ``wl`` is a host ``Worklist`` or a device ``core.build
+        .DeviceWorklist`` (whose padded pair arrays execute without ever
+        touching the host).
+        """
+        return self.execute_indices_async(
+            wl.pair_row_pos, wl.pair_col_pos, num_real=wl.num_pairs
+        )
+
+    def count(self, wl) -> int:
         """Triangle contribution of a work list (Eq. 5 execute+reduce)."""
         return self.count_async(wl).result()
 
@@ -353,8 +447,12 @@ def sbf_content_key(sb: sbf_mod.SlicedBitmap) -> str:
     calls that rebuild the SBF for the same graph still hit the cached
     executor (and two identical-content SBFs share one set of device
     stores). blake2b over the raw store bytes — tens of microseconds per MB,
-    negligible next to a count.
+    negligible next to a count. Device-built SBFs carry a precomputed
+    ``content_key`` (a digest of the *input edge list*, taken before the
+    upload), so keying them never reads the stores back from the device.
     """
+    if getattr(sb, "content_key", None) is not None:
+        return sb.content_key
     h = hashlib.blake2b(digest_size=16)
     h.update(
         repr(

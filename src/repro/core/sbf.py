@@ -30,6 +30,18 @@ __all__ = ["SlicedBitmap", "build_sbf", "build_worklist", "Worklist", "sbf_stats
 
 @dataclasses.dataclass(frozen=True)
 class SlicedBitmap:
+    """The SBF arrays — host numpy (the reference build) or device jax.
+
+    ``core.build`` produces device-resident instances whose stores are
+    zero-padded to pow2 row buckets (the executor's trace-bucketed layout);
+    there ``row_valid``/``col_valid`` carry the real valid-slice counts and
+    ``content_key`` lets executor pools key the stores without reading them
+    back. Host-built instances keep exact-length arrays and leave the
+    optional fields ``None``. ``to_host()`` is the escape hatch for
+    consumers that need numpy (the sharded executors' per-shard repacking,
+    stats, tests).
+    """
+
     slice_bits: int
     n: int
     n_slices: int  # slices per row/column = ceil(n / slice_bits)
@@ -41,6 +53,32 @@ class SlicedBitmap:
     col_ptr: np.ndarray
     col_slice_idx: np.ndarray
     col_slice_data: np.ndarray
+    # Device builds only: real record counts of the pow2-padded stores.
+    row_valid: int | None = None
+    col_valid: int | None = None
+    content_key: str | None = None
+
+    @property
+    def is_device(self) -> bool:
+        return not isinstance(self.row_slice_data, np.ndarray)
+
+    def to_host(self) -> "SlicedBitmap":
+        """Exact host materialization (identity for host-built instances)."""
+        if not self.is_device:
+            return self
+        row_n = self.row_valid if self.row_valid is not None else len(self.row_slice_idx)
+        col_n = self.col_valid if self.col_valid is not None else len(self.col_slice_idx)
+        return SlicedBitmap(
+            slice_bits=self.slice_bits,
+            n=self.n,
+            n_slices=self.n_slices,
+            row_ptr=np.asarray(self.row_ptr).astype(np.int64),
+            row_slice_idx=np.asarray(self.row_slice_idx)[:row_n].astype(np.int32),
+            row_slice_data=np.asarray(self.row_slice_data)[:row_n],
+            col_ptr=np.asarray(self.col_ptr).astype(np.int64),
+            col_slice_idx=np.asarray(self.col_slice_idx)[:col_n].astype(np.int32),
+            col_slice_data=np.asarray(self.col_slice_data)[:col_n],
+        )
 
     @property
     def words_per_slice(self) -> int:
@@ -48,7 +86,13 @@ class SlicedBitmap:
 
     @property
     def nvs(self) -> int:
-        """Total number of valid slices stored (row side + column side)."""
+        """Total number of valid slices stored (row side + column side).
+
+        Device builds pad their stores to pow2 buckets, so the real counts
+        come from ``row_valid``/``col_valid`` there.
+        """
+        if self.row_valid is not None:
+            return int(self.row_valid) + int(self.col_valid)
         return int(len(self.row_slice_idx) + len(self.col_slice_idx))
 
     @property
@@ -148,6 +192,10 @@ def _window_searchsorted(
     """Vectorized binary search of keys[i] within sorted_concat[lo[i]:hi[i])."""
     lo = lo.astype(np.int64).copy()
     hi_w = hi.astype(np.int64).copy()
+    if len(sorted_concat) == 0:
+        # Every window is empty; the lower bound is the window start. The
+        # general loop would index sorted_concat[-1] (an IndexError here).
+        return np.minimum(lo, hi_w)
     while True:
         active = lo < hi_w
         if not active.any():
@@ -169,6 +217,17 @@ def build_worklist(g: Graph, sbf: SlicedBitmap, block_edges: int = 1 << 18) -> W
     windowed binary search over the column side's sorted slice_idx lists.
     """
     src, dst = g.edges[:, 0], g.edges[:, 1]
+    if len(sbf.row_slice_idx) == 0 or len(sbf.col_slice_idx) == 0:
+        # An SBF with an empty side (e.g. an empty edge block, or a
+        # hand-sliced SBF) has no valid pairs; the expansion below would
+        # index the empty side's last element (-1) and raise.
+        return Worklist(
+            pair_edge=np.zeros(0, dtype=np.int64),
+            pair_row_pos=np.zeros(0, dtype=np.int64),
+            pair_col_pos=np.zeros(0, dtype=np.int64),
+            m_edges=g.m,
+            n_slices=sbf.n_slices,
+        )
     pe, prp, pcp = [], [], []
     for start in range(0, len(src), block_edges):
         u = src[start : start + block_edges]

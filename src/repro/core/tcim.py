@@ -17,6 +17,19 @@ Pipeline stages (each independently testable):
                 ranges)
     reduce      a single exact scalar readback (psum-closed when sharded)
 
+The first three stages run on the host (NumPy reference, ``build='host'``)
+or as jit-compiled device work (``core.build``, ``build='device'``): the
+device build performs ONE host->device transfer (the pow2-bucket-padded edge
+list) and keeps every array device-resident through the execute stage —
+stores and worklists flow straight into the pooled Executor with zero host
+bounces (two scalar readbacks size the static output buckets; the bulk
+arrays never travel). ``build='auto'`` picks the device build on
+accelerator backends for the single-device worklist path and the NumPy
+reference elsewhere. Per-stage wall-clock lands in ``TCResult.timings_s``
+(``orient``/``compress``/``schedule``/``plan``/``execute``, plus ``close``
+for async counts and ``materialize`` when a device build feeds a sharded
+mesh path, which repacks stores on the host).
+
 Backends for the execute stage (mapped onto Executor modes):
     'pallas_total'   fused gather–AND–popcount executor (default; the TCIM
                      device — indices travel, slice stores stay put)
@@ -32,22 +45,26 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import build as build_mod
 from repro.core import sbf as sbf_mod
 from repro.core.bitmat import bitpack_matrix
-from repro.core.executor import ExecutorPool
+from repro.core.executor import CountFuture, ExecutorPool
 from repro.core.plan import SCHEDULES, DeviceTopology, plan_execution
 from repro.graphs.csr import Graph, build_graph
 from repro.kernels import ops
 
 __all__ = [
     "TCResult",
+    "TCFuture",
     "tcim_count",
     "tcim_count_graph",
     "default_executor_pool",
     "BACKENDS",
+    "BUILDS",
 ]
 
 # One-shot API calls route through a shared pool keyed by store *content*,
@@ -64,6 +81,12 @@ def default_executor_pool() -> ExecutorPool:
     return _DEFAULT_POOL
 
 BACKENDS = ("pallas_total", "pallas_unfused", "pallas_items", "jnp", "bitgemm", "mxu")
+
+# Build front ends for the orient/compress/schedule stages. "auto" resolves
+# at call time: the jitted device build on accelerator backends (where the
+# host NumPy front end would serialize against dispatched execute work),
+# the NumPy reference on CPU and for every path that needs host arrays.
+BUILDS = ("auto", "host", "device")
 
 # User-facing backend -> Executor mode for the work-list execute stage.
 _EXECUTOR_MODE = {
@@ -86,7 +109,63 @@ class TCResult:
         return f"TCResult(triangles={self.triangles}, backend={self.backend}, {t})"
 
 
-def _execute_worklist(
+class TCFuture:
+    """A dispatched count whose ``TCResult`` is deferred to ``result()``.
+
+    ``tcim_count*(async_=True)`` returns one of these with every device step
+    already enqueued; ``result()`` performs the single host readback (adding
+    its wall-clock as ``timings_s['close']``) and caches the ``TCResult``.
+    Fleet callers overlap graph i's close with graph i+1's build and
+    dispatch. ``stats`` and ``timings_s`` are readable before the close.
+    """
+
+    def __init__(self, future: CountFuture, backend: str, stats: dict, timings_s: dict):
+        self._future = future
+        self.backend = backend
+        self.stats = stats
+        self.timings_s = timings_s
+        self._result: TCResult | None = None
+
+    def result(self) -> TCResult:
+        if self._result is None:
+            t0 = time.perf_counter()
+            triangles = self._future.result()
+            self.timings_s["close"] = time.perf_counter() - t0
+            self._result = TCResult(
+                triangles, self.backend, self.stats, self.timings_s
+            )
+        return self._result
+
+
+def _resolve_build(build: str, backend: str, mesh, m: int) -> str:
+    """Pick the build front end (see ``BUILDS``).
+
+    Dense backends (bitgemm/mxu) and empty graphs have nothing to build on
+    device; they always take the host path regardless of the request.
+    """
+    if build not in BUILDS:
+        raise ValueError(f"build {build!r} not in {BUILDS}")
+    if backend not in _EXECUTOR_MODE or m == 0:
+        return "host"
+    if build == "auto":
+        return "device" if mesh is None and jax.default_backend() != "cpu" else "host"
+    return build
+
+
+def _try_device_build(make_build, build: str):
+    """Run a device build; under ``build='auto'`` fall back to the host
+    front end when the device path raises one of its documented capability
+    errors (int32 index space) instead of crashing a request that never
+    pinned the build. An explicit ``build='device'`` still raises."""
+    try:
+        return make_build()
+    except ValueError:
+        if build != "auto":
+            raise
+        return None
+
+
+def _execute_worklist_async(
     sb: sbf_mod.SlicedBitmap,
     wl: sbf_mod.Worklist,
     backend: str,
@@ -95,13 +174,14 @@ def _execute_worklist(
     mesh,
     pool: ExecutorPool | None,
     schedule: str,
-) -> tuple[int, str]:
-    """Run the execute stage through the planner.
+) -> tuple[CountFuture, str, float]:
+    """Plan and dispatch the execute stage; defer the host readback.
 
     Resolves ``placement`` against the device topology (the mesh's, when
-    given), then executes on a pooled replicated Executor, the
-    column-sharded distributed path, or the 2-D owner-grid path. Returns
-    (count, resolved placement).
+    given), then dispatches on a pooled replicated Executor, the
+    column-sharded distributed path, or the 2-D owner-grid path — every
+    branch returns with its steps enqueued and the close deferred to the
+    future. Returns (future, resolved placement, planning seconds).
     """
     grid = None
     if mesh is not None:
@@ -122,9 +202,11 @@ def _execute_worklist(
             "(e.g. jax.make_mesh((4, 2), ('r', 'c'))) to place the "
             "(row_shard, col_shard) owner grid on"
         )
+    t0 = time.perf_counter()
     plan = plan_execution(
         sb, wl, topo, placement=placement, chunk_pairs=chunk_pairs, grid=grid
     )
+    plan_s = time.perf_counter() - t0
     if plan.placement == "sharded_2d":
         # Imported here: core stays importable without the distributed layer.
         from repro.distributed.tc import pooled_sharded_2d_executor
@@ -134,7 +216,7 @@ def _execute_worklist(
         )
         # count(wl, plan) falls back to the pooled executor's resident
         # bounds when the fresh plan's ranges differ — no store re-upload.
-        return ex.count(wl, plan), plan.placement
+        return ex.count_async(wl, plan), plan.placement, plan_s
     if plan.placement == "sharded_cols":
         if mesh is None:
             raise ValueError(
@@ -146,22 +228,25 @@ def _execute_worklist(
         ex = pooled_sharded_executor(
             sb, mesh, chunk_pairs=chunk_pairs, schedule=schedule
         )
-        return ex.count_plan(plan), plan.placement
+        return ex.count_plan_async(plan), plan.placement, plan_s
     if mesh is not None and topo.num_devices > 1:
         # Replicated over a real mesh: stores on every device, work-list
         # stripes dealt across it, scalar psum close. Runs the fused jnp
         # mirror inside shard_map, so `backend` does not apply here.
-        from repro.distributed.tc import distributed_tc_count
+        from repro.distributed.tc import distributed_tc_count_async
 
         return (
-            distributed_tc_count(sb, wl, mesh, max_step_pairs=plan.chunk_pairs),
+            distributed_tc_count_async(
+                sb, wl, mesh, max_step_pairs=plan.chunk_pairs
+            ),
             plan.placement,
+            plan_s,
         )
     # NOT `pool or ...`: an empty ExecutorPool is falsy (it has __len__).
     ex = (pool if pool is not None else _DEFAULT_POOL).get(
         sb, mode=_EXECUTOR_MODE[backend], chunk_pairs=chunk_pairs
     )
-    return ex.count(wl), plan.placement
+    return ex.count_async(wl), plan.placement, plan_s
 
 
 def _execute_bitgemm(g: Graph, chunk_rows: int = 2048) -> int:
@@ -183,6 +268,94 @@ def _execute_bitgemm(g: Graph, chunk_rows: int = 2048) -> int:
     return total
 
 
+def _finish_host(
+    g,
+    sb: sbf_mod.SlicedBitmap,
+    wl: sbf_mod.Worklist,
+    *,
+    backend: str,
+    chunk_pairs: int,
+    collect_stats: bool,
+    placement: str,
+    mesh,
+    pool: ExecutorPool | None,
+    schedule: str,
+    timings: dict,
+    build_label: str,
+    async_: bool,
+) -> TCResult | TCFuture:
+    """Plan + execute a host-array (sbf, worklist) pair; close per async_."""
+    t0 = time.perf_counter()
+    fut, resolved, plan_s = _execute_worklist_async(
+        sb, wl, backend, chunk_pairs, placement, mesh, pool, schedule
+    )
+    dispatch_s = time.perf_counter() - t0 - plan_s
+    timings["plan"] = plan_s
+    stats = sbf_mod.sbf_stats(g, sb, wl) if collect_stats else {"n": g.n, "m": g.m}
+    stats["placement"] = resolved
+    stats["build"] = build_label
+    if async_:
+        timings["execute"] = dispatch_s
+        return TCFuture(fut, backend, stats, timings)
+    t0 = time.perf_counter()
+    triangles = fut.result()
+    timings["execute"] = dispatch_s + time.perf_counter() - t0
+    return TCResult(triangles, backend, stats, timings)
+
+
+def _finish_device(
+    db: build_mod.DeviceBuild,
+    *,
+    backend: str,
+    chunk_pairs: int,
+    collect_stats: bool,
+    placement: str,
+    mesh,
+    pool: ExecutorPool | None,
+    schedule: str,
+    timings: dict,
+    async_: bool,
+) -> TCResult | TCFuture:
+    """Execute a device build: fully resident when replicated, else
+    materialized to the host for the sharded/mesh paths (which repack
+    stores per shard on the host anyway)."""
+    timings.update(db.timings_s)
+    if mesh is None and placement in ("auto", "replicated"):
+        # Single-device replicated: one stripe, nothing to owner-group —
+        # the plan stage is trivial, and skipping the planner keeps the
+        # worklist arrays on device (plan_execution needs host arrays).
+        timings["plan"] = 0.0
+        t0 = time.perf_counter()
+        ex = (pool if pool is not None else _DEFAULT_POOL).get(
+            db.sbf, mode=_EXECUTOR_MODE[backend], chunk_pairs=chunk_pairs
+        )
+        fut = ex.count_async(db.worklist)
+        dispatch_s = time.perf_counter() - t0
+        stats = (
+            sbf_mod.sbf_stats(db.graph, db.sbf, db.worklist)
+            if collect_stats
+            else {"n": db.graph.n, "m": db.graph.m}
+        )
+        stats["placement"] = "replicated"
+        stats["build"] = "device"
+        if async_:
+            timings["execute"] = dispatch_s
+            return TCFuture(fut, backend, stats, timings)
+        t0 = time.perf_counter()
+        triangles = fut.result()
+        timings["execute"] = dispatch_s + time.perf_counter() - t0
+        return TCResult(triangles, backend, stats, timings)
+    t0 = time.perf_counter()
+    sb, wl = db.to_host()
+    timings["materialize"] = time.perf_counter() - t0
+    return _finish_host(
+        db.graph, sb, wl,
+        backend=backend, chunk_pairs=chunk_pairs, collect_stats=collect_stats,
+        placement=placement, mesh=mesh, pool=pool, schedule=schedule,
+        timings=timings, build_label="device", async_=async_,
+    )
+
+
 def tcim_count_graph(
     g: Graph,
     *,
@@ -194,7 +367,9 @@ def tcim_count_graph(
     mesh=None,
     pool: ExecutorPool | None = None,
     schedule: str = "packed",
-) -> TCResult:
+    build: str = "auto",
+    async_: bool = False,
+) -> TCResult | TCFuture:
     """Count triangles of a prebuilt (oriented) Graph.
 
     ``placement`` routes the execute stage through ``core.plan``:
@@ -218,6 +393,18 @@ def tcim_count_graph(
     steps on imbalanced fixed-bounds replans) or ``'lockstep'`` (the legacy
     shared-window baseline); single-stripe replicated execution is
     unaffected. Counts are bit-identical across policies.
+
+    ``build`` selects the orient/compress/schedule front end: ``'host'``
+    (the NumPy reference), ``'device'`` (``core.build``: jit-compiled,
+    bit-identical, one host->device transfer, arrays device-resident
+    through the execute stage on the single-device replicated path), or
+    ``'auto'`` (device on accelerator backends without a mesh, host
+    otherwise). Sharded and mesh paths materialize a device build back to
+    the host (they repack stores per shard there; ``timings_s`` records it
+    as ``materialize``); dense backends always build on host.
+    ``async_=True`` returns a ``TCFuture`` with every step dispatched and
+    the host readback deferred to ``result()`` — every placement serves
+    fleets non-blocking.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
@@ -226,13 +413,32 @@ def tcim_count_graph(
     timings: dict[str, float] = {}
 
     if backend in ("bitgemm", "mxu"):
+        _resolve_build(build, backend, mesh, g.m)  # validates the request
         t0 = time.perf_counter()
         if backend == "mxu":
             count = int(ops.dense_mxu_tc(jnp.asarray(g.dense_upper())))
         else:
             count = _execute_bitgemm(g)
         timings["execute"] = time.perf_counter() - t0
-        return TCResult(count, backend, {"n": g.n, "m": g.m}, timings)
+        res = TCResult(count, backend, {"n": g.n, "m": g.m}, timings)
+        if async_:  # dense paths close eagerly; hand back a resolved future
+            fut = TCFuture(CountFuture([count]), backend, res.stats, timings)
+            fut._result = res
+            return fut
+        return res
+
+    if _resolve_build(build, backend, mesh, g.m) == "device":
+        db = _try_device_build(
+            lambda: build_mod.device_build_graph(g, slice_bits), build
+        )
+        if db is not None:
+            return _finish_device(
+                db,
+                backend=backend, chunk_pairs=chunk_pairs,
+                collect_stats=collect_stats, placement=placement, mesh=mesh,
+                pool=pool, schedule=schedule, timings=timings, async_=async_,
+            )
+        timings = {}  # auto fell back: restart stage timings on the host path
 
     t0 = time.perf_counter()
     sb = sbf_mod.build_sbf(g, slice_bits)
@@ -242,15 +448,12 @@ def tcim_count_graph(
     wl = sbf_mod.build_worklist(g, sb)
     timings["schedule"] = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    count, resolved = _execute_worklist(
-        sb, wl, backend, chunk_pairs, placement, mesh, pool, schedule
+    return _finish_host(
+        g, sb, wl,
+        backend=backend, chunk_pairs=chunk_pairs, collect_stats=collect_stats,
+        placement=placement, mesh=mesh, pool=pool, schedule=schedule,
+        timings=timings, build_label="host", async_=async_,
     )
-    timings["execute"] = time.perf_counter() - t0
-
-    stats = sbf_mod.sbf_stats(g, sb, wl) if collect_stats else {"n": g.n, "m": g.m}
-    stats["placement"] = resolved
-    return TCResult(count, backend, stats, timings)
 
 
 def tcim_count(
@@ -266,8 +469,37 @@ def tcim_count(
     mesh=None,
     pool: ExecutorPool | None = None,
     schedule: str = "packed",
-) -> TCResult:
-    """End-to-end triangle count from a canonical undirected edge list."""
+    build: str = "auto",
+    async_: bool = False,
+) -> TCResult | TCFuture:
+    """End-to-end triangle count from a canonical undirected edge list.
+
+    With ``build='device'`` (or ``'auto'`` on an accelerator) the edge list
+    is the ONE host->device transfer: orientation (including the optional
+    degree relabel), SBF compression and worklist construction all run as
+    jit-compiled device work, and on the single-device replicated path the
+    resulting stores and index arrays feed the executor without ever
+    returning to the host. See ``tcim_count_graph`` for the remaining
+    parameters.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
+    if _resolve_build(build, backend, mesh, len(edges)) == "device":
+        db = _try_device_build(
+            lambda: build_mod.device_build(
+                edges, n=n, slice_bits=slice_bits, reorder=reorder
+            ),
+            build,
+        )
+        if db is not None:
+            return _finish_device(
+                db,
+                backend=backend, chunk_pairs=chunk_pairs,
+                collect_stats=collect_stats, placement=placement, mesh=mesh,
+                pool=pool, schedule=schedule, timings={}, async_=async_,
+            )
     t0 = time.perf_counter()
     g = build_graph(edges, n=n, reorder=reorder)
     t_orient = time.perf_counter() - t0
@@ -281,6 +513,8 @@ def tcim_count(
         mesh=mesh,
         pool=pool,
         schedule=schedule,
+        build="host",
+        async_=async_,
     )
     res.timings_s = {"orient": t_orient, **res.timings_s}
     return res

@@ -5,6 +5,7 @@ from repro.distributed.tc import (
     TC_PLACEMENTS,
     clear_sharded_executor_cache,
     distributed_tc_count,
+    distributed_tc_count_async,
     pooled_sharded_2d_executor,
     pooled_sharded_executor,
     shard_worklist,
@@ -16,6 +17,7 @@ __all__ = [
     "TC_PLACEMENTS",
     "clear_sharded_executor_cache",
     "distributed_tc_count",
+    "distributed_tc_count_async",
     "pooled_sharded_2d_executor",
     "pooled_sharded_executor",
     "shard_worklist",

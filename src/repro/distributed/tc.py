@@ -71,6 +71,7 @@ from repro.kernels.tc_gather_popcount import gather_total_reference
 __all__ = [
     "shard_worklist",
     "distributed_tc_count",
+    "distributed_tc_count_async",
     "make_tc_step",
     "ShardedColsExecutor",
     "Sharded2DExecutor",
@@ -640,7 +641,7 @@ def clear_sharded_executor_cache() -> None:
     _SHARDED_CACHE.clear()
 
 
-def distributed_tc_count(
+def distributed_tc_count_async(
     sbf: SlicedBitmap,
     wl: Worklist,
     mesh: Mesh,
@@ -648,29 +649,23 @@ def distributed_tc_count(
     placement: str = "replicated",
     max_step_pairs: int | None = None,
     schedule: str = "packed",
-) -> int:
-    """Execute the distributed count on an actual mesh (test/production path).
+) -> CountFuture:
+    """``distributed_tc_count`` with the host readback deferred.
 
-    Per-shard partials AND their psum accumulate in int32 (x64 is off), so
-    the work list is split into stripes whose worst-case count provably fits
-    int32 — one step per stripe, per-stripe totals summed exactly on the
-    host (the distributed analogue of core.executor's escape hatch). Work
-    lists under the bound take exactly one step, as before.
+    Every placement dispatches all of its psum steps before returning — the
+    replicated path included, which used to sync ``int(step(...))`` per
+    stripe chunk; its per-stripe device scalars now ride the returned
+    ``CountFuture`` and are summed exactly (host ints) at ``result()``.
+    Fleet callers overlap graph i's close with graph i+1's build and
+    stripe assembly on ANY placement.
 
-    ``placement='sharded_cols'`` runs the column-sharded path instead: the
-    column store is NamedSharding-sharded over the mesh and the work list is
-    owner-grouped per shard (see ``ShardedColsExecutor``).
-    ``placement='sharded_2d'`` shards BOTH stores over a 2-axis mesh with
-    pair-count-weighted ranges (see ``Sharded2DExecutor``). Long-lived
-    callers should construct the executors themselves and reuse them.
-
-    ``max_step_pairs`` additionally bounds the pairs per psum step below the
-    int32-safety budget (the caller's memory bound, e.g. the engine's
-    ``chunk_pairs``). ``schedule`` picks the sharded paths' stripe
-    scheduling policy (``packed`` default / ``lockstep`` baseline; the
-    replicated path has a single stripe, so it does not apply there). All
-    placements run the fused jnp mirror inside shard_map — Executor modes
-    don't apply here.
+    Like every async path in this repo (``Executor.execute_indices_async``,
+    the sharded ``count_plan_async``), all steps' index uploads may be in
+    flight at once: ``max_step_pairs`` bounds the per-step compute and the
+    psum's int32 worst case, while total *staging* memory grows with the
+    step count (8 index bytes per lane per side). Callers serving work
+    lists with very many steps under tight device memory should sync in
+    batches (loop sub-worklists through the blocking API) instead.
     """
     if placement not in TC_PLACEMENTS:
         raise ValueError(f"placement {placement!r} not in {TC_PLACEMENTS}")
@@ -680,7 +675,7 @@ def distributed_tc_count(
     if placement == "sharded_cols":
         return pooled_sharded_executor(
             sbf, mesh, chunk_pairs=chunk, schedule=schedule
-        ).count(wl)
+        ).count_async(wl)
     if placement == "sharded_2d":
         grid = tuple(int(x) for x in mesh.devices.shape)
         if len(grid) != 2:
@@ -699,11 +694,11 @@ def distributed_tc_count(
         ex = pooled_sharded_2d_executor(
             sbf, mesh, plan, chunk_pairs=chunk, schedule=schedule
         )
-        return ex.count(wl, plan)
+        return ex.count_async(wl, plan)
     if wl.num_pairs == 0:
         # Match the sharded paths' empty-schedule guard: nothing to count,
         # so never pad, upload, or dispatch a psum step for it.
-        return 0
+        return CountFuture([])
     axis_names = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
     step = make_tc_step(mesh, axis_names)
@@ -712,11 +707,11 @@ def distributed_tc_count(
     max_pairs = max(INT32_SAFE_WORDS // max(sbf.words_per_slice, 1), 1)
     if max_step_pairs is not None:
         max_pairs = max(min(max_pairs, max_step_pairs), 1)
-    total = 0
+    totals = []
     for start in range(0, max(wl.num_pairs, 1), max_pairs):
         sub = _slice_worklist(wl, start, start + max_pairs)
         row_idx, col_idx = shard_worklist(sub, n_dev)
-        total += int(
+        totals.append(
             step(
                 row_store,
                 col_store,
@@ -724,7 +719,51 @@ def distributed_tc_count(
                 jnp.asarray(col_idx.reshape(-1)),
             )
         )
-    return total
+    return CountFuture(totals)
+
+
+def distributed_tc_count(
+    sbf: SlicedBitmap,
+    wl: Worklist,
+    mesh: Mesh,
+    *,
+    placement: str = "replicated",
+    max_step_pairs: int | None = None,
+    schedule: str = "packed",
+) -> int:
+    """Execute the distributed count on an actual mesh (test/production path).
+
+    Per-shard partials AND their psum accumulate in int32 (x64 is off), so
+    the work list is split into stripes whose worst-case count provably fits
+    int32 — one step per stripe, per-stripe totals summed exactly on the
+    host (the distributed analogue of core.executor's escape hatch). Work
+    lists under the bound take exactly one step, as before; either way the
+    steps are all dispatched before the single host sync (see
+    ``distributed_tc_count_async``, which defers even that).
+
+    ``placement='sharded_cols'`` runs the column-sharded path instead: the
+    column store is NamedSharding-sharded over the mesh and the work list is
+    owner-grouped per shard (see ``ShardedColsExecutor``).
+    ``placement='sharded_2d'`` shards BOTH stores over a 2-axis mesh with
+    pair-count-weighted ranges (see ``Sharded2DExecutor``). Long-lived
+    callers should construct the executors themselves and reuse them.
+
+    ``max_step_pairs`` additionally bounds the pairs per psum step below the
+    int32-safety budget (the caller's memory bound, e.g. the engine's
+    ``chunk_pairs``). ``schedule`` picks the sharded paths' stripe
+    scheduling policy (``packed`` default / ``lockstep`` baseline; the
+    replicated path has a single stripe, so it does not apply there). All
+    placements run the fused jnp mirror inside shard_map — Executor modes
+    don't apply here.
+    """
+    return distributed_tc_count_async(
+        sbf,
+        wl,
+        mesh,
+        placement=placement,
+        max_step_pairs=max_step_pairs,
+        schedule=schedule,
+    ).result()
 
 
 def _slice_worklist(wl: Worklist, start: int, stop: int) -> Worklist:

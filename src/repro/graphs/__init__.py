@@ -1,6 +1,8 @@
 """Graph substrate: generators, CSR structures, orientations, exact references.
 
-Everything here is plain numpy (host-side preprocessing); the compute path that
+Host-side structures are plain numpy; ``device_orient`` mirrors
+``build_graph`` as jit-compiled device work (``DeviceGraph``), feeding the
+device build pipeline in ``repro.core.build``. The compute path that
 consumes these structures lives in ``repro.core`` / ``repro.kernels``.
 """
 from repro.graphs.generators import (
@@ -12,7 +14,14 @@ from repro.graphs.generators import (
     triangle_free_bipartite,
     GRAPH_GENERATORS,
 )
-from repro.graphs.csr import Graph, build_graph, degree_order, upper_triangular_edges
+from repro.graphs.csr import (
+    DeviceGraph,
+    Graph,
+    build_graph,
+    degree_order,
+    device_orient,
+    upper_triangular_edges,
+)
 from repro.graphs.exact import (
     triangles_dense_trace,
     triangles_intersection,
@@ -27,9 +36,11 @@ __all__ = [
     "complete_graph",
     "triangle_free_bipartite",
     "GRAPH_GENERATORS",
+    "DeviceGraph",
     "Graph",
     "build_graph",
     "degree_order",
+    "device_orient",
     "upper_triangular_edges",
     "triangles_dense_trace",
     "triangles_intersection",

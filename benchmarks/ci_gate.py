@@ -25,6 +25,16 @@ Gates:
     equal the host build's on every gate graph (the ``build`` rows also
     carry ``build_host_s``/``build_device_s`` per-stage timings so the
     bench trajectory attributes wall-clock to the build front end).
+  * **recovery** — the resilience layer's cost and correctness, run in a
+    subprocess with 8 forced host devices (XLA locks the device count at
+    init, so the parent stays single-device for the other rows). Per mesh
+    ((1, 4) and (4, 2)): steady-state checkpoint overhead at cadence 8
+    (min-of-3 resumable vs plain count, snapshot pre-written and reported
+    separately as ``snapshot_s``) must stay under
+    ``RECOVERY_OVERHEAD_GATE``; a kill-a-device run (fail mid-schedule,
+    shrink-remesh, resume from the cursor) must reproduce the exact count
+    with ``steps_replayed <= checkpoint_every``; rows carry the replay
+    count and recovery wall-clock for the bench trajectory.
 
 Plan/schedule checks are pure numpy and the build check is two small
 end-to-end counts, so the gate runs in seconds on one device.
@@ -32,6 +42,8 @@ end-to-end counts, so the gate runs in seconds on one device.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
 IMBALANCE_GATE = 1.25
@@ -45,6 +57,108 @@ GATE_GRIDS = ((1, 4), (1, 8), (2, 2), (4, 2))
 STEP_FIXTURE = ("ego-facebook", (4, 2))
 # Budget sizing: lockstep walks the longest stripe in ~this many windows.
 STEP_GATE_WINDOWS = 16
+# Resilience gates: steady-state checkpoint overhead ceiling at cadence 8,
+# on a fixture big enough that per-step work dominates the commit cost.
+RECOVERY_OVERHEAD_GATE = 0.10
+RECOVERY_CHECKPOINT_EVERY = 8
+
+# Runs with 8 forced host devices in a fresh interpreter; prints one JSON
+# line ("ROWS <json>") the parent parses. Kept as source (not a function)
+# because the parent process must not import jax with a forced device count.
+_RECOVERY_SRC = """
+import json, os, sys, tempfile, time
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import build_sbf, build_worklist
+from repro.graphs import build_graph, rmat
+from repro.distributed import ResilienceConfig, TCCheckpoint, resilient_tc_count
+from repro.distributed.resilient import _build_executor
+from repro.runtime import FailureInjector
+
+EVERY = %(every)d
+g = build_graph(rmat(4000, 60000, seed=7), reorder=True)
+sbf = build_sbf(g, 256)
+wl = build_worklist(g, sbf)
+devs = jax.devices()
+assert len(devs) == 8, devs
+
+rows = []
+for grid, lose in (((1, 4), 1), ((4, 2), 2)):
+    mesh = Mesh(np.asarray(devs[:grid[0] * grid[1]], dtype=object)
+                .reshape(grid), ('rows', 'cols'))
+    ex, plan = _build_executor(sbf, wl, mesh, chunk_pairs=4096,
+                               schedule='packed')
+    steps = ex.stripe_schedule(plan).num_steps
+    want = ex.count_plan(plan)  # warm + reference
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = TCCheckpoint(os.path.join(d, 'warm'))
+        t0 = time.perf_counter()
+        ckpt.save_snapshot(sbf, plan, attempt=0, base_total=0)
+        ckpt.wait()
+        snapshot_s = time.perf_counter() - t0
+        # Interleaved min-of-5 so machine noise hits both sides equally.
+        base_ts, resum_ts = [], []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            ex.count_plan(plan)
+            base_ts.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            got, info = ex.count_plan_resumable(
+                plan, checkpoint_every=EVERY, checkpointer=ckpt)
+            ckpt.wait()
+            resum_ts.append(time.perf_counter() - t0)
+        baseline_s = min(base_ts)
+        resumable_s = min(resum_ts)
+        # Kill-a-device: fail mid-schedule, shrink, resume from the cursor.
+        cfg = ResilienceConfig(
+            checkpoint_dir=os.path.join(d, 'kill'), checkpoint_every=EVERY,
+            injector=FailureInjector(fail_at_steps=(steps // 2 + 1,)),
+            lose_devices=lose)
+        t0 = time.perf_counter()
+        recovered, rinfo = resilient_tc_count(sbf, wl, mesh, cfg,
+                                              chunk_pairs=4096)
+        kill_total_s = time.perf_counter() - t0
+    rows.append({
+        'grid': list(grid),
+        'steps': steps,
+        'checkpoint_every': EVERY,
+        'commits': info['checkpoints'],
+        'baseline_s': round(baseline_s, 4),
+        'resumable_s': round(resumable_s, 4),
+        'overhead': round(resumable_s / baseline_s - 1.0, 4),
+        'snapshot_s': round(snapshot_s, 4),
+        'count_ok': bool(got == want),
+        'recover_grid': rinfo['grid'],
+        'steps_replayed': rinfo['steps_replayed'],
+        'recovery_s': round(rinfo['recovery_s'], 4),
+        'kill_total_s': round(kill_total_s, 4),
+        'recovered_ok': bool(recovered == want),
+    })
+print('ROWS ' + json.dumps(rows))
+"""
+
+
+def _recovery_rows() -> list[dict]:
+    """Recovery bench on 8 forced host devices via a fresh interpreter."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(src_root, "src"), src_root,
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _RECOVERY_SRC % {"every": RECOVERY_CHECKPOINT_EVERY}],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"recovery bench failed:\n{out.stderr[-3000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith("ROWS "):
+            return json.loads(line[len("ROWS "):])
+    raise RuntimeError(f"recovery bench emitted no ROWS line:\n{out.stdout}")
 
 
 def _stripe_step_row(name, grid, plan) -> dict:
@@ -145,20 +259,25 @@ def run(out_path: str = "BENCH_ci.json") -> int:
                 _stripe_step_row(name, (rows_s, cols_s), fixed)
             )
 
+    recovery_rows = _recovery_rows()
+
     payload = {
         "gate": IMBALANCE_GATE,
         "step_gate_reduction": STEP_GATE_REDUCTION,
+        "recovery_overhead_gate": RECOVERY_OVERHEAD_GATE,
         "table5": rows,
         "imbalance": imbalance,
         "stripe_steps": stripe_steps,
         "build": build_rows,
+        "recovery": recovery_rows,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
     print(f"wrote {out_path}: {len(rows)} table5 rows, "
           f"{len(imbalance)} imbalance configs, "
           f"{len(stripe_steps)} stripe-step configs, "
-          f"{len(build_rows)} build configs")
+          f"{len(build_rows)} build configs, "
+          f"{len(recovery_rows)} recovery configs")
 
     failures = [
         r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
@@ -202,6 +321,29 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"{r['triangles_host']}/{r['triangles_device']}"
         )
 
+    recovery_failures = []
+    for r in recovery_rows:
+        bad = (
+            not r["count_ok"]
+            or not r["recovered_ok"]
+            or r["overhead"] > RECOVERY_OVERHEAD_GATE
+            or r["steps_replayed"] > r["checkpoint_every"]
+        )
+        if bad:
+            recovery_failures.append(r)
+        status = "FAIL" if bad else "ok"
+        print(
+            f"  [{status}] recovery {r['grid'][0]}x{r['grid'][1]}: "
+            f"overhead={100 * r['overhead']:.1f}% "
+            f"(gate {100 * RECOVERY_OVERHEAD_GATE:.0f}%, "
+            f"{r['commits']} commits/{r['steps']} steps, "
+            f"snapshot {r['snapshot_s']:.3f}s) kill -> "
+            f"{r['recover_grid'][0]}x{r['recover_grid'][1]} "
+            f"replayed={r['steps_replayed']} "
+            f"recovery={r['recovery_s']:.3f}s "
+            f"counts {'match' if r['recovered_ok'] else 'MISMATCH'}"
+        )
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
     else:
@@ -214,7 +356,13 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"build-parity gate FAILED for {len(build_failures)} config(s)")
     else:
         print("build-parity gate passed")
-    return 1 if failures or step_failures or build_failures else 0
+    if recovery_failures:
+        print(f"recovery gate FAILED for {len(recovery_failures)} config(s)")
+    else:
+        print("recovery gate passed")
+    return 1 if (
+        failures or step_failures or build_failures or recovery_failures
+    ) else 0
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 from repro.checkpoint.store import (
     CheckpointManager,
+    list_steps,
     load_checkpoint,
     save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint", "list_steps"]

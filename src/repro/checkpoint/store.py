@@ -32,7 +32,12 @@ import jax
 import ml_dtypes
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "list_steps",
+    "CheckpointManager",
+]
 
 _SENTINEL = "_COMMITTED"
 
@@ -100,16 +105,22 @@ def _is_committed(path: Path) -> bool:
     return (path / _SENTINEL).exists()
 
 
-def latest_step(directory: str | Path) -> int | None:
+def list_steps(directory: str | Path) -> list[int]:
+    """All committed checkpoint steps under ``directory``, ascending.
+    Uncommitted (.tmp / sentinel-less) directories are invisible."""
     directory = Path(directory)
     if not directory.exists():
-        return None
-    steps = [
+        return []
+    return sorted(
         int(p.name.split("_")[1])
         for p in directory.iterdir()
         if p.name.startswith("step_") and _is_committed(p)
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str | Path) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(directory: str | Path, tree_like, step: int | None = None,
@@ -152,6 +163,7 @@ class CheckpointManager:
         self.directory = Path(directory)
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         self.directory.mkdir(parents=True, exist_ok=True)
 
     def save_async(self, step: int, tree, extra: dict | None = None):
@@ -160,8 +172,11 @@ class CheckpointManager:
         self.wait()
 
         def _write():
-            save_checkpoint(self.directory, step, host_tree, extra)
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced by the next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -172,9 +187,16 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join the in-flight save. A failed background write re-raises here
+        — a silently dropped checkpoint must never masquerade as durable."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.directory} failed"
+            ) from err
 
     def restore(self, tree_like, step: int | None = None, shardings=None):
         self.wait()

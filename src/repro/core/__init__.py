@@ -26,6 +26,7 @@ from repro.core.plan import (
     even_range_bounds,
     plan_execution,
     range_owners,
+    remaining_worklist,
     weighted_range_bounds,
 )
 from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
@@ -84,6 +85,7 @@ __all__ = [
     "even_range_bounds",
     "plan_execution",
     "range_owners",
+    "remaining_worklist",
     "weighted_range_bounds",
     "DeviceBuild",
     "DeviceBuildFuture",

@@ -116,6 +116,11 @@ class CountFuture:
 
     ``result()`` is idempotent, and ``count(...) ==
     count_async(...).result()`` bit-identically on every path.
+
+    A step whose readback fails (device loss, injected fault) surfaces as
+    ``CountInterrupted`` carrying the failing step's index and the exact
+    partial total of the steps before it — already-dispatched work is never
+    silently dropped, and the resilient drivers resume from that prefix.
     """
 
     __slots__ = ("_totals", "_value")
@@ -127,12 +132,38 @@ class CountFuture:
     def result(self) -> int:
         if self._totals is not None:
             totals = self._totals
-            if len(totals) > 1:
-                # One stacked device->host transfer, not one per step.
-                totals = np.asarray(jnp.stack(totals))
-            self._value = sum(int(t) for t in totals)  # exact: host ints
+            try:
+                if len(totals) > 1:
+                    # One stacked device->host transfer, not one per step.
+                    totals = np.asarray(jnp.stack(totals))
+                self._value = sum(int(t) for t in totals)  # exact: host ints
+            except Exception as e:
+                raise self._interrupted(e) from e
             self._totals = None
         return self._value
+
+    def _interrupted(self, err: Exception) -> "CountInterrupted":
+        """Recover the committed prefix: read the per-step scalars one by
+        one until the poisoned step, so the caller gets the exact partial
+        total plus the index of the step that died."""
+        from repro.runtime.fault import CountInterrupted
+
+        partial = 0
+        failed = 0
+        for i, t in enumerate(self._totals):
+            try:
+                partial += int(t)
+            except Exception:
+                failed = i
+                break
+        else:  # the stacked transfer itself failed, but every step reads
+            failed = len(self._totals)
+        return CountInterrupted(
+            f"count failed at step {failed} of {len(self._totals)}: {err}",
+            failed_step=failed,
+            committed_step=failed,
+            committed_total=partial,
+        )
 
 
 def staged_uploads(chunks, put, *, double_buffer: bool = True):

@@ -65,6 +65,7 @@ __all__ = [
     "StripeSchedule",
     "build_stripe_schedule",
     "plan_execution",
+    "remaining_worklist",
     "clamp_chunk_pairs",
     "pow2_ceil",
     "shard_col_bounds",
@@ -349,19 +350,40 @@ class StripeSchedule:
         the host->device index traffic is 8 bytes per lane."""
         return sum(self.num_shards * s.bucket for s in self.steps)
 
-    def emit(self, stripes: tuple["WorkStripe", ...]):
+    def cursor_after(self, num_steps: int) -> tuple[int, ...]:
+        """Per-shard consumed-pair offsets after the first ``num_steps``.
+
+        THE serializable progress cursor: the schedule is deterministic
+        given (stripe lengths, budget, policy), and both policies advance
+        each shard contiguously, so ``cursor_after(k)[s]`` is exactly the
+        count of shard ``s``'s stripe pairs executed by steps ``[0, k)`` —
+        a resumable count checkpoints this tuple plus the committed total,
+        and recovery re-executes only each stripe's ``[cursor, end)`` tail.
+        """
+        if not 0 <= num_steps <= len(self.steps):
+            raise ValueError(
+                f"num_steps must be in [0, {len(self.steps)}], got {num_steps}"
+            )
+        if num_steps == 0:
+            return (0,) * self.num_shards
+        last = self.steps[num_steps - 1]
+        return tuple(s + n for s, n in zip(last.starts, last.lens))
+
+    def emit(self, stripes: tuple["WorkStripe", ...], start_step: int = 0):
         """Yield per-step host ``(ridx, cidx)`` flat int32 arrays.
 
         ``stripes`` must be the same owner stripes the schedule was built
         from (one per shard, in shard order). Each yielded pair flattens
-        the ``[num_shards, bucket]`` window shard-major.
+        the ``[num_shards, bucket]`` window shard-major. ``start_step``
+        skips the first steps — the same-schedule resume path, bit-identical
+        to slicing the full emission.
         """
         if len(stripes) != self.num_shards:
             raise ValueError(
                 f"schedule built for {self.num_shards} stripes, got "
                 f"{len(stripes)}"
             )
-        for step in self.steps:
+        for step in self.steps[start_step:]:
             ridx = np.full((self.num_shards, step.bucket), -1, dtype=np.int32)
             cidx = np.full((self.num_shards, step.bucket), -1, dtype=np.int32)
             for s, stripe in enumerate(stripes):
@@ -672,6 +694,62 @@ def plan_execution(
     )
     assert plan.total_pairs == wl.num_pairs
     return plan
+
+
+def remaining_worklist(
+    plan: ExecutionPlan,
+    shard_cursors=None,
+    *,
+    m_edges: int = 0,
+    n_slices: int = 0,
+) -> sbf_mod.Worklist:
+    """Rebuild a *global-coordinate* work list from a plan's stripe tails.
+
+    ``shard_cursors[s]`` is the consumed-pair offset of stripe ``s``
+    (``StripeSchedule.cursor_after``; ``None`` means nothing consumed —
+    the full plan worklist). The stripes' shard-local coordinates are
+    lifted back to store-global positions via the plan's bounds, so the
+    result can be re-planned onto ANY grid — the elastic-recovery step:
+    the uncounted pairs, as a fresh worklist, for a fresh mesh. Exact
+    because the stripes partition the original pair multiset and the
+    schedule consumes each stripe contiguously.
+
+    ``pair_edge`` is synthesized as zeros (the planner and executors only
+    read positions); pass ``m_edges``/``n_slices`` to keep the reduction
+    stats meaningful when known.
+    """
+    if shard_cursors is None:
+        cursors = [0] * len(plan.stripes)
+    else:
+        cursors = [int(c) for c in shard_cursors]
+    if len(cursors) != len(plan.stripes):
+        raise ValueError(
+            f"{len(cursors)} cursors for {len(plan.stripes)} stripes"
+        )
+    rows, cols = [], []
+    for cur, stripe in zip(cursors, plan.stripes):
+        if not 0 <= cur <= stripe.num_pairs:
+            raise ValueError(
+                f"cursor {cur} out of range for stripe {stripe.shard} "
+                f"({stripe.num_pairs} pairs)"
+            )
+        rp = stripe.row_pos[cur:].astype(np.int64)
+        cp = stripe.col_pos[cur:].astype(np.int64)
+        if plan.row_bounds is not None:
+            rp = rp + int(plan.row_bounds[stripe.row_shard])
+        if plan.col_bounds is not None:
+            cp = cp + int(plan.col_bounds[stripe.col_shard])
+        rows.append(rp)
+        cols.append(cp)
+    pr = np.concatenate(rows) if rows else np.zeros(0, np.int64)
+    pc = np.concatenate(cols) if cols else np.zeros(0, np.int64)
+    return sbf_mod.Worklist(
+        pair_edge=np.zeros(len(pr), np.int64),
+        pair_row_pos=pr,
+        pair_col_pos=pc,
+        m_edges=int(m_edges),
+        n_slices=int(n_slices),
+    )
 
 
 def _plan_sharded_2d(

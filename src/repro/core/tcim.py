@@ -283,8 +283,47 @@ def _finish_host(
     timings: dict,
     build_label: str,
     async_: bool,
+    resilience=None,
 ) -> TCResult | TCFuture:
     """Plan + execute a host-array (sbf, worklist) pair; close per async_."""
+    if resilience is not None:
+        # Checkpointed, elastic execution (distributed.resilient): commits
+        # are synchronous readbacks, so the count closes eagerly and
+        # async_=True hands back an already-resolved future.
+        if mesh is None or mesh.devices.ndim != 2:
+            raise ValueError(
+                "resilience= runs the sharded_2d placement and needs a "
+                "2-axis mesh= (e.g. jax.make_mesh((4, 2), ('r', 'c')))"
+            )
+        if placement not in ("auto", "sharded_2d"):
+            raise ValueError(
+                f"resilience= implies placement 'sharded_2d', got "
+                f"{placement!r}"
+            )
+        from repro.distributed.resilient import resilient_tc_count
+
+        t0 = time.perf_counter()
+        triangles, rinfo = resilient_tc_count(
+            sb, wl, mesh, resilience, chunk_pairs=chunk_pairs,
+            schedule=schedule,
+        )
+        timings["execute"] = time.perf_counter() - t0
+        if "step_ewma_s" in rinfo:
+            timings["step_ewma_s"] = rinfo["step_ewma_s"]
+        stats = (
+            sbf_mod.sbf_stats(g, sb, wl)
+            if collect_stats
+            else {"n": g.n, "m": g.m}
+        )
+        stats["placement"] = "sharded_2d"
+        stats["build"] = build_label
+        stats["recovery"] = rinfo
+        res = TCResult(triangles, backend, stats, timings)
+        if async_:
+            fut = TCFuture(CountFuture([triangles]), backend, stats, timings)
+            fut._result = res
+            return fut
+        return res
     t0 = time.perf_counter()
     fut, resolved, plan_s = _execute_worklist_async(
         sb, wl, backend, chunk_pairs, placement, mesh, pool, schedule
@@ -315,12 +354,13 @@ def _finish_device(
     schedule: str,
     timings: dict,
     async_: bool,
+    resilience=None,
 ) -> TCResult | TCFuture:
     """Execute a device build: fully resident when replicated, else
     materialized to the host for the sharded/mesh paths (which repack
     stores per shard on the host anyway)."""
     timings.update(db.timings_s)
-    if mesh is None and placement in ("auto", "replicated"):
+    if resilience is None and mesh is None and placement in ("auto", "replicated"):
         # Single-device replicated: one stripe, nothing to owner-group —
         # the plan stage is trivial, and skipping the planner keeps the
         # worklist arrays on device (plan_execution needs host arrays).
@@ -353,6 +393,7 @@ def _finish_device(
         backend=backend, chunk_pairs=chunk_pairs, collect_stats=collect_stats,
         placement=placement, mesh=mesh, pool=pool, schedule=schedule,
         timings=timings, build_label="device", async_=async_,
+        resilience=resilience,
     )
 
 
@@ -369,8 +410,19 @@ def tcim_count_graph(
     schedule: str = "packed",
     build: str = "auto",
     async_: bool = False,
+    resilience=None,
 ) -> TCResult | TCFuture:
     """Count triangles of a prebuilt (oriented) Graph.
+
+    ``resilience`` (a ``repro.distributed.ResilienceConfig``) routes the
+    execute stage through the checkpointed elastic driver
+    (``distributed.resilient.resilient_tc_count``): the count commits a
+    resume cursor every ``checkpoint_every`` psum steps and survives
+    device loss by shrinking the mesh and resuming the uncounted pairs —
+    bit-identically. Requires a 2-axis ``mesh`` (the sharded_2d
+    placement); ``stats['recovery']`` reports attempts/failures/replays,
+    and a configured ``StragglerMonitor``'s per-step EWMA lands in
+    ``timings_s['step_ewma_s']``.
 
     ``placement`` routes the execute stage through ``core.plan``:
     ``'replicated'`` (stores on every device, pooled Executor),
@@ -437,6 +489,7 @@ def tcim_count_graph(
                 backend=backend, chunk_pairs=chunk_pairs,
                 collect_stats=collect_stats, placement=placement, mesh=mesh,
                 pool=pool, schedule=schedule, timings=timings, async_=async_,
+                resilience=resilience,
             )
         timings = {}  # auto fell back: restart stage timings on the host path
 
@@ -453,6 +506,7 @@ def tcim_count_graph(
         backend=backend, chunk_pairs=chunk_pairs, collect_stats=collect_stats,
         placement=placement, mesh=mesh, pool=pool, schedule=schedule,
         timings=timings, build_label="host", async_=async_,
+        resilience=resilience,
     )
 
 
@@ -471,6 +525,7 @@ def tcim_count(
     schedule: str = "packed",
     build: str = "auto",
     async_: bool = False,
+    resilience=None,
 ) -> TCResult | TCFuture:
     """End-to-end triangle count from a canonical undirected edge list.
 
@@ -499,6 +554,7 @@ def tcim_count(
                 backend=backend, chunk_pairs=chunk_pairs,
                 collect_stats=collect_stats, placement=placement, mesh=mesh,
                 pool=pool, schedule=schedule, timings={}, async_=async_,
+                resilience=resilience,
             )
     t0 = time.perf_counter()
     g = build_graph(edges, n=n, reorder=reorder)
@@ -515,6 +571,7 @@ def tcim_count(
         schedule=schedule,
         build="host",
         async_=async_,
+        resilience=resilience,
     )
     res.timings_s = {"orient": t_orient, **res.timings_s}
     return res

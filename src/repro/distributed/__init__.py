@@ -10,8 +10,20 @@ from repro.distributed.tc import (
     pooled_sharded_executor,
     shard_worklist,
 )
+from repro.distributed.resilient import (
+    RecoveryState,
+    ResilienceConfig,
+    TCCheckpoint,
+    resilient_tc_count,
+    resume_tc_count,
+)
 
 __all__ = [
+    "RecoveryState",
+    "ResilienceConfig",
+    "TCCheckpoint",
+    "resilient_tc_count",
+    "resume_tc_count",
     "Sharded2DExecutor",
     "ShardedColsExecutor",
     "TC_PLACEMENTS",

@@ -67,6 +67,7 @@ from repro.core.plan import (
 from repro.core.sbf import SlicedBitmap, Worklist
 from repro.kernels.ops import INT32_SAFE_WORDS
 from repro.kernels.tc_gather_popcount import gather_total_reference
+from repro.runtime.fault import CountInterrupted
 
 __all__ = [
     "shard_worklist",
@@ -258,6 +259,148 @@ class _StripeScheduleDriver:
     def count_plan(self, plan: ExecutionPlan) -> int:
         """Count an owner-grouped plan. One exact host sum at the end."""
         return self.count_plan_async(plan).result()
+
+    def count_plan_resumable(
+        self,
+        plan: ExecutionPlan,
+        *,
+        checkpoint_every: int = 8,
+        checkpointer=None,
+        injector=None,
+        monitor=None,
+        monitor_interrupts: bool = False,
+        start_step: int = 0,
+        base_total: int = 0,
+        attempt: int = 0,
+    ) -> tuple[int, dict]:
+        """The checkpointed step loop: every ``checkpoint_every`` psum steps
+        the pending device scalars are read back, folded into the exact
+        committed total, and the ``(shard_cursors, total)`` cursor is saved
+        through ``checkpointer`` (async — file I/O overlaps the next steps).
+        Any failure past that point surfaces as ``CountInterrupted``
+        carrying the last committed cursor, so a resume replays at most
+        ``checkpoint_every`` steps; replay is exact because uncommitted
+        steps contributed nothing to the committed total (commutative
+        integer monoid over disjoint pair windows).
+
+        ``checkpointer`` is duck-typed (``distributed.resilient
+        .TCCheckpoint``): ``save_snapshot`` persists the SBF stores +
+        full worklist once per attempt, ``save_cursor`` the per-commit
+        cursor. ``injector`` (``runtime.fault.FailureInjector``) hooks
+        each dispatch; ``monitor`` (``StragglerMonitor``) makes the loop
+        block per step to time it — observability costs the dispatch
+        pipelining, so it is opt-in — and with ``monitor_interrupts`` a
+        straggler flag commits and raises (reason ``"straggler"``) for
+        the caller's checkpoint-and-remesh policy. ``start_step`` /
+        ``base_total`` / ``attempt`` are the same-schedule resume inputs.
+
+        Returns ``(total, info)``; ``info`` records steps, commits, and
+        the step-time EWMA when monitored.
+        """
+        self._check_plan(plan)
+        sched = self.stripe_schedule(plan)
+        n = sched.num_steps
+        if not 0 <= start_step <= n:
+            raise ValueError(f"start_step must be in [0, {n}], got {start_step}")
+        every = int(checkpoint_every) if checkpoint_every else 0
+        if checkpointer is not None:
+            checkpointer.save_snapshot(
+                self._sbf, plan, attempt=attempt, base_total=base_total,
+                schedule=self.schedule,
+            )
+        total = int(base_total)
+        committed_step = start_step
+        pending: list = []
+        info: dict = {
+            "steps": n,
+            "start_step": start_step,
+            "attempt": attempt,
+            "checkpoints": 0,
+        }
+
+        def commit(upto: int) -> None:
+            nonlocal total, committed_step
+            if pending:
+                # Small windows (the cadence path) read scalars one by one:
+                # a jnp.stack over <= checkpoint_every scalars costs more in
+                # dispatch than the transfers it batches. Big windows (no
+                # cadence: one commit for the whole count) still stack.
+                vals = (
+                    np.asarray(jnp.stack(pending))
+                    if len(pending) > 16
+                    else pending
+                )
+                total += sum(int(v) for v in vals)
+                pending.clear()
+            committed_step = upto
+            if checkpointer is not None:
+                checkpointer.save_cursor(
+                    attempt, upto, sched.cursor_after(upto), total, plan
+                )
+                info["checkpoints"] += 1
+
+        flat = NamedSharding(self.mesh, P(self.axis_names))
+        staged = staged_uploads(
+            sched.emit(plan.stripes, start_step),
+            lambda rc: (
+                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
+            ),
+            double_buffer=self.double_buffer,
+        )
+        step_i = start_step
+        try:
+            for ridx, cidx in staged:
+                if injector is not None:
+                    injector.check(step_i)
+                if monitor is not None:
+                    monitor.start_step()
+                t = self._step(self.row_store, self.col_store, ridx, cidx)
+                pending.append(t)
+                if monitor is not None:
+                    jax.block_until_ready(t)
+                    flagged = monitor.end_step()
+                    ewma = getattr(monitor, "ewma", None)
+                    if ewma is not None:
+                        info["step_ewma_s"] = float(ewma)
+                    if flagged:
+                        info["straggler_flags"] = (
+                            info.get("straggler_flags", 0) + 1
+                        )
+                    if flagged and monitor_interrupts:
+                        # The flagged step finished — commit through it so
+                        # the remesh replays nothing.
+                        commit(step_i + 1)
+                        raise CountInterrupted(
+                            f"straggler flagged at step {step_i} of {n}",
+                            failed_step=step_i + 1,
+                            committed_step=committed_step,
+                            committed_total=total,
+                            shard_cursors=sched.cursor_after(committed_step),
+                            reason="straggler",
+                            attempt=attempt,
+                        )
+                step_i += 1
+                if every and step_i < n and (step_i - start_step) % every == 0:
+                    commit(step_i)
+            commit(n)
+        except CountInterrupted:
+            raise
+        except Exception as e:
+            raise CountInterrupted(
+                f"sharded count failed at step {step_i} of {n}: {e}",
+                failed_step=step_i,
+                committed_step=committed_step,
+                committed_total=total,
+                shard_cursors=sched.cursor_after(committed_step),
+                reason="failure",
+                attempt=attempt,
+            ) from e
+        return total, info
+
+    def count_resumable(self, wl: Worklist, **kwargs) -> tuple[int, dict]:
+        """``count_plan_resumable`` over a work list planned against this
+        executor's resident store ranges."""
+        return self.count_plan_resumable(self._plan(wl), **kwargs)
 
     def count_async(self, wl: Worklist) -> CountFuture:
         """``count`` with the final host readback deferred to ``result()``."""

@@ -1,4 +1,17 @@
-from repro.runtime.fault import FailureInjector, StragglerMonitor
-from repro.runtime.elastic import elastic_remesh_plan
+from repro.runtime.fault import (
+    CountInterrupted,
+    FailureInjector,
+    SimulatedFailure,
+    StragglerMonitor,
+)
+from repro.runtime.elastic import RemeshPlan, elastic_remesh_plan, tc_remesh_plan
 
-__all__ = ["FailureInjector", "StragglerMonitor", "elastic_remesh_plan"]
+__all__ = [
+    "CountInterrupted",
+    "FailureInjector",
+    "SimulatedFailure",
+    "StragglerMonitor",
+    "RemeshPlan",
+    "elastic_remesh_plan",
+    "tc_remesh_plan",
+]

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["elastic_remesh_plan", "RemeshPlan"]
+__all__ = ["elastic_remesh_plan", "tc_remesh_plan", "RemeshPlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +74,54 @@ def elastic_remesh_plan(
         new_pod = 1
     if new_data != shape.get("data", 1):
         reasons.append(f"data axis {shape.get('data', 1)} -> {new_data}")
-    new_shape = tuple(
-        {"pod": new_pod, "data": new_data, model_axis: model}[n] for n in axis_names
-    )
+    # Axes this policy doesn't know (e.g. expert/sequence axes) pass through
+    # at their old size — shrinking them is the caller's policy, not ours.
+    known = {"pod": new_pod, "data": new_data, model_axis: model}
+    new_shape = tuple(known.get(n, shape[n]) for n in axis_names)
+    total = 1
+    for s in new_shape:
+        total *= s
+    if total > available_devices:
+        reasons.append(
+            f"pass-through axes keep {total} devices > {available_devices} "
+            "available"
+        )
+        return RemeshPlan(old_shape, new_shape, axis_names, False, tuple(reasons))
     return RemeshPlan(old_shape, new_shape, axis_names, True, tuple(reasons))
+
+
+def tc_remesh_plan(
+    grid: tuple[int, int],
+    available_devices: int,
+    axis_names: tuple[str, str] = ("rows", "cols"),
+) -> RemeshPlan:
+    """Shrink a TC ``(rows, cols)`` owner grid onto the surviving devices.
+
+    Unlike the train mesh, the TC grid has no divisibility constraints —
+    the reduction is a commutative monoid over pair stripes, so ANY
+    ``r x c`` factorization is exact after a re-deal. Pick the factorization
+    using the most surviving devices, tie-broken toward the old aspect
+    (fewest store blocks move on restore): ``(4, 2)`` with 6 survivors
+    becomes ``(3, 2)``; ``(1, 4)`` with 3 becomes ``(1, 3)``.
+    """
+    rows, cols = int(grid[0]), int(grid[1])
+    old = (rows, cols)
+    if available_devices < 1:
+        return RemeshPlan(
+            old, old, tuple(axis_names), False, ("no surviving devices",)
+        )
+    best_key, best = None, old
+    for c in range(1, available_devices + 1):
+        r = available_devices // c
+        key = (r * c, -abs(c - cols), -abs(r - rows))
+        if best_key is None or key > best_key:
+            best_key, best = key, (r, c)
+    reasons = (
+        ()
+        if best == old
+        else (
+            f"grid {rows}x{cols} -> {best[0]}x{best[1]} "
+            f"({available_devices} surviving devices)",
+        )
+    )
+    return RemeshPlan(old, best, tuple(axis_names), True, reasons)

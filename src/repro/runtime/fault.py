@@ -21,11 +21,70 @@ from __future__ import annotations
 import dataclasses
 import time
 
-__all__ = ["SimulatedFailure", "FailureInjector", "StragglerMonitor"]
+__all__ = [
+    "SimulatedFailure",
+    "CountInterrupted",
+    "FailureInjector",
+    "StragglerMonitor",
+]
 
 
 class SimulatedFailure(RuntimeError):
     """Injected node failure (tests / examples)."""
+
+
+class CountInterrupted(RuntimeError):
+    """A sharded count died mid-flight — with everything needed to resume.
+
+    Raised by the resumable execute drivers (``distributed.tc
+    ._StripeScheduleDriver.count_plan_resumable`` and
+    ``core.executor.CountFuture``) instead of a bare exception: the count's
+    reduction is a commutative integer monoid over disjoint pair stripes, so
+    the *committed* prefix is exact and only the pairs past the committed
+    cursor need re-execution — on the same mesh or (via
+    ``distributed.resilient``) a shrunk one.
+
+    Attributes:
+        failed_step:     psum step index the failure surfaced at.
+        committed_step:  last step whose total + cursor were committed.
+        committed_total: exact partial count through ``committed_step``
+                         (includes any ``base_total`` carried into the run).
+        shard_cursors:   per-shard consumed-pair offsets at the committed
+                         step (``StripeSchedule.cursor_after``), or ``None``
+                         when the interrupted path tracked no schedule.
+        reason:          ``"failure"`` (exception at dispatch/readback) or
+                         ``"straggler"`` (StragglerMonitor flag).
+        attempt:         the resilient driver's attempt number (0 = first).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        failed_step: int,
+        committed_step: int = 0,
+        committed_total: int = 0,
+        shard_cursors: tuple[int, ...] | None = None,
+        reason: str = "failure",
+        attempt: int = 0,
+    ):
+        super().__init__(message)
+        self.failed_step = int(failed_step)
+        self.committed_step = int(committed_step)
+        self.committed_total = int(committed_total)
+        self.shard_cursors = (
+            tuple(int(c) for c in shard_cursors)
+            if shard_cursors is not None
+            else None
+        )
+        self.reason = reason
+        self.attempt = int(attempt)
+
+    @property
+    def steps_replayed(self) -> int:
+        """Steps past the committed cursor a resume re-executes (<= the
+        driver's ``checkpoint_every``)."""
+        return max(self.failed_step - self.committed_step, 0)
 
 
 @dataclasses.dataclass
@@ -59,6 +118,14 @@ class StragglerMonitor:
         self._strikes = 0
         self.history: list[float] = []
         self._t0: float | None = None
+
+    def reset(self):
+        """Forget history — e.g. after an elastic remesh, whose new gang has
+        a different per-step baseline that must not inherit stale strikes."""
+        self.ewma = None
+        self._strikes = 0
+        self.history = []
+        self._t0 = None
 
     def start_step(self):
         self._t0 = time.perf_counter()

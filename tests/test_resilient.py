@@ -1,0 +1,414 @@
+"""Resumable, elastic, fault-tolerant sharded counts.
+
+Two layers:
+
+* in-process tests on a 1x1 (rows, cols) mesh — cursor math, worklist
+  re-partitioning, checkpointed counting, failure/straggler interruption,
+  resume-from-disk, and the ``tcim_count_graph(resilience=...)`` routing;
+* subprocess tests on 8 forced host devices (same isolation pattern as
+  ``test_distributed.py``) — the kill-a-device matrix: fail early/middle/
+  late on (1, 4) and (4, 2) meshes, shrink-remesh onto (1, 3) and (3, 2),
+  and prove the resumed count is bit-identical with at most
+  ``checkpoint_every`` steps replayed.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# Small enough for the CI box, big enough for a multi-step schedule at
+# CHUNK pairs per psum step.
+GRAPH = dict(n=400, m=2500, seed=1)
+CHUNK = 256
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _fixture():
+    from repro.core import Executor, build_sbf, build_worklist
+    from repro.graphs import build_graph, rmat
+
+    g = build_graph(rmat(**GRAPH), reorder=True)
+    sbf = build_sbf(g)
+    wl = build_worklist(g, sbf)
+    oracle = Executor(sbf, mode="jnp").count(wl)
+    return g, sbf, wl, oracle
+
+
+def _mesh_1x1():
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(
+        np.asarray(jax.devices()[:1], dtype=object).reshape(1, 1),
+        ("rows", "cols"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cursor + worklist re-partitioning (pure planner, no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["packed", "lockstep"])
+def test_cursor_after_is_exact_consumed_prefix(policy):
+    from repro.core import build_stripe_schedule
+
+    lens = [37, 5, 0, 61]
+    sched = build_stripe_schedule(lens, budget=16, policy=policy)
+    assert sched.cursor_after(0) == (0, 0, 0, 0)
+    assert sched.cursor_after(sched.num_steps) == tuple(lens)
+    # Every prefix matches a direct walk of the emitted windows.
+    consumed = np.zeros(len(lens), dtype=np.int64)
+    for k, step in enumerate(sched.steps, start=1):
+        consumed += np.asarray(step.lens, dtype=np.int64)
+        assert sched.cursor_after(k) == tuple(int(c) for c in consumed), (
+            policy, k)
+    with pytest.raises(ValueError):
+        sched.cursor_after(sched.num_steps + 1)
+    with pytest.raises(ValueError):
+        sched.cursor_after(-1)
+
+
+@pytest.mark.parametrize("grid", [(1, 4), (2, 2)])
+def test_remaining_worklist_complements_consumed_prefix(grid):
+    """remaining_worklist(plan, cursor_after(k)) is exactly the global pair
+    set minus the first k emitted windows — for every k."""
+    from repro.core import DeviceTopology, plan_execution, remaining_worklist
+
+    _, sbf, wl, _ = _fixture()
+    plan = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=grid[0] * grid[1]),
+        placement="sharded_2d", grid=grid, chunk_pairs=CHUNK,
+    )
+    from repro.core import build_stripe_schedule
+
+    lens = [s.num_pairs for s in plan.stripes]
+    sched = build_stripe_schedule(lens, CHUNK, policy="packed")
+
+    def _pairs(rp, cp):
+        return set(zip(rp.tolist(), cp.tolist()))
+
+    full = _pairs(np.asarray(wl.pair_row_pos), np.asarray(wl.pair_col_pos))
+    rem0 = remaining_worklist(plan, None, n_slices=wl.n_slices)
+    assert _pairs(rem0.pair_row_pos, rem0.pair_col_pos) == full
+
+    consumed = set()
+    emitted = sched.emit(plan.stripes)
+    for k in range(1, sched.num_steps + 1):
+        ridx, cidx = next(emitted)
+        keep = ridx >= 0
+        # Emitted indices are block-local; lift to global coordinates.
+        shard = np.repeat(np.arange(sched.num_shards), len(ridx) // sched.num_shards)
+        rb = np.asarray(plan.row_bounds)
+        cb = np.asarray(plan.col_bounds)
+        rshard = np.array([plan.stripes[s].row_shard for s in shard])
+        cshard = np.array([plan.stripes[s].col_shard for s in shard])
+        consumed |= _pairs(ridx[keep] + rb[rshard[keep]],
+                           cidx[keep] + cb[cshard[keep]])
+        rem = remaining_worklist(
+            plan, sched.cursor_after(k), n_slices=wl.n_slices)
+        assert _pairs(rem.pair_row_pos, rem.pair_col_pos) == full - consumed, k
+    assert consumed == full  # the schedule covers everything exactly once
+
+
+def test_remaining_worklist_validates_cursors():
+    from repro.core import DeviceTopology, plan_execution, remaining_worklist
+
+    _, sbf, wl, _ = _fixture()
+    plan = plan_execution(
+        sbf, wl, DeviceTopology(num_devices=2), placement="sharded_2d",
+        grid=(1, 2), chunk_pairs=CHUNK,
+    )
+    with pytest.raises(ValueError):
+        remaining_worklist(plan, (0,))  # wrong arity
+    bad = [s.num_pairs for s in plan.stripes]
+    bad[0] += 1
+    with pytest.raises(ValueError):
+        remaining_worklist(plan, tuple(bad))  # cursor past the stripe
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed counting on a 1x1 mesh (tier-1: single device)
+# ---------------------------------------------------------------------------
+
+
+def test_resumable_count_matches_plain_and_checkpoints(tmp_path):
+    from repro.checkpoint.store import list_steps
+    from repro.distributed import Sharded2DExecutor, TCCheckpoint
+
+    _, sbf, wl, oracle = _fixture()
+    mesh = _mesh_1x1()
+    ex = Sharded2DExecutor(sbf, mesh, chunk_pairs=CHUNK)
+    assert ex.count(wl) == oracle
+    ckpt = TCCheckpoint(tmp_path)
+    total, info = ex.count_resumable(wl, checkpoint_every=4, checkpointer=ckpt)
+    ckpt.wait()
+    assert total == oracle
+    assert info["checkpoints"] >= 2 and info["steps"] > 4
+    # Snapshot once (attempt 0), cursor per commit; the final commit is
+    # always written so resume-from-disk never replays a finished count.
+    assert list_steps(tmp_path / "stores") == [0]
+    cursor_steps = list_steps(tmp_path / "cursor")
+    assert cursor_steps and cursor_steps[-1] == info["steps"]
+
+
+def test_injected_failure_interrupts_with_committed_cursor(tmp_path):
+    from repro.distributed import Sharded2DExecutor, TCCheckpoint
+    from repro.runtime import CountInterrupted, FailureInjector
+
+    _, sbf, wl, _ = _fixture()
+    ex = Sharded2DExecutor(sbf, _mesh_1x1(), chunk_pairs=CHUNK)
+    ckpt = TCCheckpoint(tmp_path)
+    with pytest.raises(CountInterrupted) as ei:
+        ex.count_resumable(
+            wl, checkpoint_every=2, checkpointer=ckpt,
+            injector=FailureInjector(fail_at_steps=(5,)),
+        )
+    err = ei.value
+    assert err.reason == "failure"
+    assert err.failed_step == 5 and err.committed_step == 4
+    assert err.steps_replayed == 1 <= 2
+    assert err.shard_cursors is not None
+    assert len(err.shard_cursors) == 1  # one stripe on the 1x1 grid
+
+
+def test_resilient_count_recovers_without_device_loss(tmp_path):
+    from repro.distributed import ResilienceConfig, resilient_tc_count
+    from repro.runtime import FailureInjector
+
+    _, sbf, wl, oracle = _fixture()
+    cfg = ResilienceConfig(
+        checkpoint_dir=tmp_path, checkpoint_every=2,
+        injector=FailureInjector(fail_at_steps=(3,)), lose_devices=0,
+    )
+    total, info = resilient_tc_count(sbf, wl, _mesh_1x1(), cfg,
+                                     chunk_pairs=CHUNK)
+    assert total == oracle
+    assert info["failures"] == 1 and info["attempts"] == 2
+    assert info["steps_replayed"] <= cfg.checkpoint_every
+    assert info["remeshes"][0]["reason"] == "failure"
+
+
+def test_resume_from_disk_is_bit_identical(tmp_path):
+    from repro.distributed import (
+        ResilienceConfig, resilient_tc_count, resume_tc_count,
+    )
+    from repro.runtime import CountInterrupted, FailureInjector
+
+    _, sbf, wl, oracle = _fixture()
+    mesh = _mesh_1x1()
+    cfg = ResilienceConfig(
+        checkpoint_dir=tmp_path, checkpoint_every=2,
+        injector=FailureInjector(fail_at_steps=(5,)), lose_devices=0,
+        max_failures=0,  # surface the interruption: the "process died" case
+    )
+    with pytest.raises(CountInterrupted):
+        resilient_tc_count(sbf, wl, mesh, cfg, chunk_pairs=CHUNK)
+    # A fresh process resumes from the on-disk snapshot + cursor alone.
+    total, info = resume_tc_count(tmp_path, mesh)
+    assert total == oracle
+    assert info["attempt"] == 1
+    # Resuming an already-finished count replays nothing and re-reports it.
+    total2, info2 = resume_tc_count(tmp_path, mesh)
+    assert total2 == oracle and info2["steps"] == 0
+
+
+def test_straggler_flag_commits_then_interrupts(tmp_path):
+    from repro.distributed import Sharded2DExecutor, TCCheckpoint
+    from repro.runtime import CountInterrupted
+
+    class FlagAt:
+        """Duck-typed StragglerMonitor: flag a specific step."""
+
+        def __init__(self, step):
+            self.step, self.seen, self.ewma = step, 0, 0.001
+
+        def start_step(self):
+            pass
+
+        def end_step(self):
+            self.seen += 1
+            return self.seen == self.step
+
+        def reset(self):
+            self.seen = 0
+
+    _, sbf, wl, _ = _fixture()
+    ex = Sharded2DExecutor(sbf, _mesh_1x1(), chunk_pairs=CHUNK)
+    ckpt = TCCheckpoint(tmp_path)
+    with pytest.raises(CountInterrupted) as ei:
+        ex.count_resumable(
+            wl, checkpoint_every=4, checkpointer=ckpt,
+            monitor=FlagAt(3), monitor_interrupts=True,
+        )
+    err = ei.value
+    assert err.reason == "straggler"
+    # The flagged step itself is committed: zero replay on remesh.
+    assert err.committed_step == err.failed_step == 3
+    assert err.steps_replayed == 0
+    # Without monitor_interrupts the flag is observability only.
+    total, info = ex.count_resumable(
+        wl, checkpoint_every=4, monitor=FlagAt(3), monitor_interrupts=False)
+    assert info["straggler_flags"] >= 1 and "step_ewma_s" in info
+
+
+def test_count_future_failure_carries_partial_context():
+    from repro.core import CountFuture
+    from repro.runtime import CountInterrupted
+
+    class Poison:
+        def __int__(self):
+            raise RuntimeError("device pulled")
+
+    fut = CountFuture([np.int64(3), np.int64(4), Poison(), np.int64(5)])
+    with pytest.raises(CountInterrupted) as ei:
+        fut.result()
+    err = ei.value
+    assert err.failed_step == 2 and err.committed_total == 7
+    assert "step 2 of 4" in str(err)
+    assert err.__cause__ is not None  # the device error is chained, not eaten
+
+
+def test_tcim_count_graph_resilience_routing(tmp_path):
+    from repro.core import tcim_count_graph
+    from repro.distributed import ResilienceConfig
+    from repro.graphs import build_graph, rmat
+    from repro.graphs.exact import triangles_intersection
+    from repro.runtime import FailureInjector
+
+    g = build_graph(rmat(**GRAPH), reorder=True)
+    cfg = ResilienceConfig(
+        checkpoint_dir=tmp_path, checkpoint_every=2,
+        injector=FailureInjector(fail_at_steps=(3,)), lose_devices=0,
+    )
+    res = tcim_count_graph(
+        g, backend="jnp", mesh=_mesh_1x1(), resilience=cfg,
+        chunk_pairs=CHUNK, collect_stats=False,
+    )
+    assert res.triangles == triangles_intersection(g)
+    assert res.stats["placement"] == "sharded_2d"
+    assert res.stats["recovery"]["attempts"] == 2
+    with pytest.raises(ValueError, match="2-axis mesh"):
+        tcim_count_graph(g, resilience=cfg)
+    with pytest.raises(ValueError, match="sharded_2d"):
+        tcim_count_graph(g, mesh=_mesh_1x1(), placement="replicated",
+                         resilience=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Kill-a-device matrix on 8 forced host devices (subprocess isolation)
+# ---------------------------------------------------------------------------
+
+_KILL_TEMPLATE = """
+import tempfile
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import Executor, build_sbf, build_worklist
+from repro.graphs import build_graph, rmat
+from repro.distributed import ResilienceConfig, resilient_tc_count
+from repro.distributed.resilient import _build_executor
+from repro.runtime import FailureInjector
+
+g = build_graph(rmat(n={n}, m={m}, seed={seed}), reorder=True)
+sbf = build_sbf(g)
+wl = build_worklist(g, sbf)
+oracle = Executor(sbf, mode='jnp').count(wl)
+devs = jax.devices()
+assert len(devs) == 8, devs
+
+EVERY = 2
+for grid, lose, want_grid in (((1, 4), 1, (1, 3)), ((4, 2), 2, (3, 2))):
+    mesh = Mesh(np.asarray(devs[:grid[0] * grid[1]], dtype=object)
+                .reshape(grid), ('rows', 'cols'))
+    ex, plan = _build_executor(sbf, wl, mesh, chunk_pairs={chunk},
+                               schedule='packed')
+    steps = ex.stripe_schedule(plan).num_steps
+    assert steps >= 4, steps
+    fail_at = {{'early': 1, 'middle': steps // 2, 'late': steps - 1}}['{stage}']
+    with tempfile.TemporaryDirectory() as d:
+        cfg = ResilienceConfig(
+            checkpoint_dir=d, checkpoint_every=EVERY,
+            injector=FailureInjector(fail_at_steps=(fail_at,)),
+            lose_devices=lose)
+        total, info = resilient_tc_count(sbf, wl, mesh, cfg,
+                                         chunk_pairs={chunk})
+    assert total == oracle, (grid, total, oracle)
+    assert tuple(info['grid']) == want_grid, info['grid']
+    assert info['steps_replayed'] <= EVERY, info
+    assert info['attempts'] == 2 and info['failures'] == 1
+    print('OK', grid, '->', info['grid'], 'fail_at', fail_at,
+          'replayed', info['steps_replayed'])
+"""
+
+
+@pytest.mark.parametrize("stage", ["early", "middle", "late"])
+def test_kill_a_device_recovers(stage):
+    """Lose 1 of 4 (row mesh) and 2 of 8 (4x2 mesh) at the given point in
+    the schedule; the shrunk mesh finishes with the exact count and at most
+    ``checkpoint_every`` steps replayed."""
+    out = _run(_KILL_TEMPLATE.format(stage=stage, chunk=CHUNK, **GRAPH))
+    assert out.count("OK") == 2
+
+
+def test_snapshot_restores_onto_smaller_mesh_shardings():
+    """The store snapshot written under a (4, 2) mesh restores through
+    ``load_checkpoint(shardings=...)`` onto a (3, 2) mesh: every leaf lands
+    on the 6 surviving devices, values bit-identical."""
+    out = _run(
+        """
+import tempfile
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import build_sbf, build_worklist
+from repro.graphs import build_graph, rmat
+from repro.distributed import TCCheckpoint
+from repro.distributed.resilient import _build_executor
+
+g = build_graph(rmat(400, 2500, seed=1), reorder=True)
+sbf = build_sbf(g)
+wl = build_worklist(g, sbf)
+devs = jax.devices()
+mesh8 = Mesh(np.asarray(devs[:8], dtype=object).reshape(4, 2),
+             ('rows', 'cols'))
+ex, plan = _build_executor(sbf, wl, mesh8, chunk_pairs=256,
+                           schedule='packed')
+with tempfile.TemporaryDirectory() as d:
+    ckpt = TCCheckpoint(d)
+    ckpt.save_snapshot(sbf, plan, attempt=0, base_total=0)
+    ckpt.wait()
+    mesh6 = Mesh(np.asarray(devs[:6], dtype=object).reshape(3, 2),
+                 ('rows', 'cols'))
+    state = ckpt.load_latest(mesh=mesh6)
+survivors = set(devs[:6])
+got = np.asarray(state.sbf.row_slice_data)
+np.testing.assert_array_equal(got, np.asarray(sbf.row_slice_data))
+arr = state.sbf.row_slice_data
+assert isinstance(arr, jax.Array)
+assert {s.device for s in arr.addressable_shards} <= survivors
+assert arr.sharding.mesh.shape == {'rows': 3, 'cols': 2}
+assert state.worklist.num_pairs == wl.num_pairs
+assert state.grid == (4, 2)  # the grid the snapshot was cut under
+print('OK')
+"""
+    )
+    assert "OK" in out

@@ -3,12 +3,12 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
-from repro.checkpoint.store import latest_step
+from repro.checkpoint.store import latest_step, list_steps
 from repro.launch.train import TrainLoop, run_with_auto_resume
 from repro.optim import AdamWConfig
 from repro.runtime import FailureInjector, StragglerMonitor
-from repro.runtime.elastic import elastic_remesh_plan
-from repro.runtime.fault import SimulatedFailure
+from repro.runtime.elastic import elastic_remesh_plan, tc_remesh_plan
+from repro.runtime.fault import CountInterrupted, SimulatedFailure
 
 
 def _tree(rng):
@@ -103,3 +103,122 @@ def test_elastic_remesh_plans():
     # Exact single pod.
     plan3 = elastic_remesh_plan((2, 16, 16), ("pod", "data", "model"), 256, 256)
     assert plan3.ok and plan3.new_device_count == 256
+
+
+def test_elastic_remesh_unknown_axes_pass_through():
+    """Axes outside {pod, data, model} keep their extent instead of raising
+    (the historical KeyError on e.g. TC's (rows, cols) meshes)."""
+    plan = elastic_remesh_plan((4, 2), ("rows", "cols"), 8, 8)
+    assert plan.ok and plan.new_shape == (4, 2)
+    # Pass-through axes that alone exceed the surviving fleet are flagged
+    # infeasible, not silently oversubscribed.
+    plan2 = elastic_remesh_plan((4, 2), ("rows", "cols"), 6, 8)
+    assert not plan2.ok
+    assert any("pass-through" in r for r in plan2.reasons)
+
+
+def test_tc_remesh_plan_shrinks_toward_old_grid():
+    # Lose 2 of 8: (4, 2) -> (3, 2) keeps the column extent.
+    plan = tc_remesh_plan((4, 2), 6)
+    assert plan.ok and plan.new_shape == (3, 2) and plan.new_device_count == 6
+    # 1-D mesh stays 1-D: (1, 4) -> (1, 3).
+    assert tc_remesh_plan((1, 4), 3).new_shape == (1, 3)
+    # Nothing lost: identity.
+    assert tc_remesh_plan((4, 2), 8).new_shape == (4, 2)
+    # Awkward survivor counts still use every device (prime -> 1-D).
+    plan7 = tc_remesh_plan((4, 2), 7)
+    assert plan7.ok and plan7.new_device_count == 7
+    assert tc_remesh_plan((4, 2), 0).ok is False
+
+
+def test_count_interrupted_carries_cursor_context():
+    err = CountInterrupted(
+        "boom", failed_step=11, committed_step=8, committed_total=42,
+        shard_cursors=(3, 5), reason="failure", attempt=1,
+    )
+    assert isinstance(err, RuntimeError)
+    assert err.steps_replayed == 3
+    assert err.shard_cursors == (3, 5) and err.committed_total == 42
+    # Replay never goes negative (straggler commits through the flagged step).
+    flagged = CountInterrupted("slow", failed_step=4, committed_step=4,
+                               reason="straggler")
+    assert flagged.steps_replayed == 0
+
+
+def test_checkpoint_bfloat16_roundtrip(tmp_path):
+    import ml_dtypes
+
+    tree = {
+        "bf16": np.arange(24, dtype=np.float32).reshape(4, 6).astype(
+            ml_dtypes.bfloat16),
+        "f8": np.linspace(-2, 2, 8, dtype=np.float32).astype(
+            ml_dtypes.float8_e4m3fn),
+        "plain": np.arange(5, dtype=np.int64),
+    }
+    save_checkpoint(tmp_path, 3, tree)
+    restored, step, _ = load_checkpoint(tmp_path, tree)
+    assert step == 3
+    assert restored["bf16"].dtype == ml_dtypes.bfloat16
+    assert restored["f8"].dtype == ml_dtypes.float8_e4m3fn
+    np.testing.assert_array_equal(
+        np.asarray(restored["bf16"], dtype=np.float32),
+        np.asarray(tree["bf16"], dtype=np.float32))
+    np.testing.assert_array_equal(
+        restored["f8"].view(np.uint8), tree["f8"].view(np.uint8))
+
+
+def test_crash_mid_save_tmp_dir_invisible_and_collected(tmp_path, rng):
+    """A writer that died mid-save leaves .tmp_step_*; it must be invisible
+    to discovery and swept by the next manager save."""
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    tree = _tree(rng)
+    mgr.save(5, tree)
+    # Simulate the crash: a staging dir with a manifest but no sentinel.
+    wreck = tmp_path / ".tmp_step_00000009"
+    wreck.mkdir()
+    (wreck / "manifest.json").write_text("{}")
+    (wreck / "leaf_00000.npy").write_bytes(b"partial")
+    assert latest_step(tmp_path) == 5
+    assert list_steps(tmp_path) == [5]
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(tmp_path, tree, step=9)
+    mgr.save(6, tree)
+    assert not wreck.exists(), "stale staging dir survived GC"
+    assert list_steps(tmp_path) == [5, 6]
+
+
+def test_async_writer_failure_surfaces_on_wait(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path)
+    # Make the staging dir creation fail: occupy the .tmp path with a file.
+    blocker = tmp_path / ".tmp_step_00000004"
+    blocker.write_text("not a directory")
+    mgr.save_async(4, _tree(rng))
+    with pytest.raises(RuntimeError, match="async checkpoint write"):
+        mgr.wait()
+    # The error is consumed: the manager is reusable afterwards.
+    blocker.unlink()
+    mgr.save_async(4, _tree(rng))
+    mgr.wait()
+    assert latest_step(tmp_path) == 4
+
+
+def test_restore_with_shardings_onto_mesh(tmp_path, rng):
+    """shardings= reshards restored leaves onto a caller mesh whose shape
+    differs from whatever wrote the checkpoint (here: host arrays ->
+    2-axis device mesh). The real multi-device shrink restore is covered
+    by tests/test_resilient.py on forced devices."""
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    tree = _tree(rng)
+    save_checkpoint(tmp_path, 1, tree)
+    mesh = Mesh(
+        np.asarray(jax.devices()[:1], dtype=object).reshape(1, 1),
+        ("rows", "cols"),
+    )
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    restored, _, _ = load_checkpoint(tmp_path, tree, shardings=shardings)
+    leaf = restored["a"]
+    assert isinstance(leaf, jax.Array)
+    assert leaf.sharding.mesh.shape == {"rows": 1, "cols": 1}
+    np.testing.assert_array_equal(np.asarray(leaf), tree["a"])

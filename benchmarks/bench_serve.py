@@ -1,0 +1,189 @@
+"""Serving throughput: fused multi-graph dispatch vs the per-graph loop.
+
+The many-small-graphs regime GraphChallenge scores (sustained throughput
+over a stream of graphs) is exactly where per-graph dispatch overhead
+dominates: a fleet of SNAP-scale-or-smaller tenants pays one jit dispatch,
+two index uploads, and one readback per graph even with ``count_async``
+overlap. ``launch.tc_serve``'s cross-graph fusion retires a whole batch in
+ONE dispatch; this bench measures the win and gates it:
+
+  * **unfused baseline** — the per-graph ``ExecutorPool.count_async`` loop
+    (dispatch every graph, then resolve every future), steady-state: the
+    pool already holds every graph's device stores.
+  * **fused serving** — ``TCServer.serve`` over the same mix,
+    steady-state: the fused batch cache already holds the stacked stores
+    and index blocks, so each round is one dispatch + one readback.
+
+Rows report sustained graphs/sec, per-graph p50/p99 latency, the
+fused-vs-unfused throughput ratio (gated >= ``SERVE_GATE_RATIO``), count
+parity against the independent jnp oracle (gated exact), and the
+admission-control scenario's reject count. ``run()`` returns
+``(rows, failures)`` so ``ci_gate.py`` embeds the same rows in
+``BENCH_ci.json``.
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SERVE_GATE_RATIO = 2.0
+NUM_GRAPHS = 32
+ROUNDS = 5
+# The mix: n cycles through these, m ~ EDGE_FACTOR * n, seeds all distinct.
+MIX_N = (64, 96, 128, 192, 256, 384, 512, 768)
+EDGE_FACTOR = 6
+
+
+def _mix(num_graphs: int = NUM_GRAPHS, seed: int = 0):
+    """Deterministic heterogeneous small-graph mix + jnp-oracle counts."""
+    from repro.core import build_sbf, build_worklist
+    from repro.core.executor import Executor
+    from repro.graphs import build_graph, rmat
+
+    jobs, oracle = [], []
+    for i in range(num_graphs):
+        n = MIX_N[i % len(MIX_N)]
+        g = build_graph(rmat(n, EDGE_FACTOR * n, seed=seed + i))
+        sb = build_sbf(g, 64)
+        wl = build_worklist(g, sb)
+        jobs.append((sb, wl))
+        oracle.append(Executor(sb, mode="jnp").count(wl))
+    return jobs, oracle
+
+
+def _pct(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    k = min(int(q * (len(sorted_vals) - 1) + 0.5), len(sorted_vals) - 1)
+    return sorted_vals[k]
+
+
+def _bench_unfused(jobs, rounds: int):
+    """Per-graph ``count_async`` loop: dispatch all, resolve all."""
+    from repro.core.executor import ExecutorPool
+
+    pool = ExecutorPool(max_graphs=len(jobs) + 1)
+    counts = [pool.count_async(sb, wl).result() for sb, wl in jobs]  # warm
+    lats: list[float] = []
+    t_all = time.perf_counter()
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        futs = [pool.count_async(sb, wl) for sb, wl in jobs]
+        got = []
+        for f in futs:
+            got.append(f.result())
+            lats.append(time.perf_counter() - t0)
+        assert got == counts
+    total_s = time.perf_counter() - t_all
+    return counts, total_s, sorted(lats)
+
+
+def _bench_fused(jobs, rounds: int):
+    """``TCServer.serve`` over the same mix (fused batches, cached)."""
+    from repro.launch.tc_serve import ServeConfig, TCServer
+
+    srv = TCServer(
+        ServeConfig(
+            max_fused_pairs=1 << 16,
+            max_fused_graphs=len(jobs),
+        )
+    )
+    warm = {r.request_id: r.count for r in srv.serve(jobs)}
+    counts = [warm[i] for i in sorted(warm)]
+    lats: list[float] = []
+    t_all = time.perf_counter()
+    for _ in range(rounds):
+        results = srv.serve(jobs)
+        assert all(r.status == "ok" for r in results)
+        lats.extend(r.latency_s for r in results)
+    total_s = time.perf_counter() - t_all
+    return counts, total_s, sorted(lats), srv
+
+
+def _admission_row(jobs) -> dict:
+    """Tiny-budget scenario: rejects reported, admitted counts still exact."""
+    from repro.core.plan import pow2_ceil
+    from repro.launch.tc_serve import ServeConfig, TCServer
+
+    footprints = sorted(
+        (
+            pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1)) * 8
+            + pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1)) * 8
+            + pow2_ceil(max(wl.num_pairs, 1)) * 8
+            for sb, wl in jobs
+        )
+    )
+    # Budget sized so the largest graphs can never fit but the median can.
+    budget = footprints[len(footprints) // 2] * 2
+    srv = TCServer(
+        ServeConfig(memory_budget_bytes=budget, max_fused_pairs=1 << 16)
+    )
+    results = srv.serve(jobs)
+    return {
+        "budget_bytes": budget,
+        "submitted": len(jobs),
+        "rejected": srv.stats.get("rejected", 0),
+        "served": sum(1 for r in results if r.status == "ok"),
+        "waves": srv.stats.get("waves", 0),
+    }
+
+
+def run(num_graphs: int = NUM_GRAPHS, rounds: int = ROUNDS):
+    """Returns ``(rows, failures)``; rows are the ``serve`` entries for
+    ``BENCH_ci.json`` and failures the gate-violating subset."""
+    from benchmarks.common import emit
+
+    jobs, oracle = _mix(num_graphs)
+    base_counts, base_s, base_lats = _bench_unfused(jobs, rounds)
+    fused_counts, fused_s, fused_lats, srv = _bench_fused(jobs, rounds)
+
+    n_served = num_graphs * rounds
+    base_gps = n_served / max(base_s, 1e-9)
+    fused_gps = n_served / max(fused_s, 1e-9)
+    ratio = fused_gps / max(base_gps, 1e-9)
+    counts_ok = list(base_counts) == oracle and list(fused_counts) == oracle
+    admission = _admission_row(jobs)
+    row = {
+        "mix": f"{num_graphs}x rmat n<= {max(MIX_N)}",
+        "rounds": rounds,
+        "graphs_per_s_unfused": round(base_gps, 2),
+        "graphs_per_s_fused": round(fused_gps, 2),
+        "ratio": round(ratio, 3),
+        "p50_unfused_ms": round(1e3 * _pct(base_lats, 0.50), 3),
+        "p99_unfused_ms": round(1e3 * _pct(base_lats, 0.99), 3),
+        "p50_fused_ms": round(1e3 * _pct(fused_lats, 0.50), 3),
+        "p99_fused_ms": round(1e3 * _pct(fused_lats, 0.99), 3),
+        "counts_ok": bool(counts_ok),
+        "fused_batches": srv.stats.get("fused_batches", 0),
+        "admission": admission,
+        "gate_ratio": SERVE_GATE_RATIO,
+    }
+    bad = (not counts_ok) or ratio < SERVE_GATE_RATIO or (
+        admission["rejected"] == 0
+        or admission["served"] + admission["rejected"] != admission["submitted"]
+    )
+    emit(
+        "serve_fused_vs_loop",
+        1e6 * fused_s / n_served,
+        f"{fused_gps:.0f}_gps_{ratio:.2f}x_"
+        f"p99_{row['p99_fused_ms']:.1f}ms_"
+        f"{'ok' if counts_ok else 'COUNT_MISMATCH'}",
+    )
+    return [row], ([row] if bad else [])
+
+
+if __name__ == "__main__":
+    rows, failures = run()
+    r = rows[0]
+    print(
+        f"  [{'FAIL' if failures else 'ok'}] serve {r['mix']}: "
+        f"fused={r['graphs_per_s_fused']:.0f} g/s "
+        f"unfused={r['graphs_per_s_unfused']:.0f} g/s "
+        f"ratio={r['ratio']:.2f}x (gate {SERVE_GATE_RATIO}x) "
+        f"p50/p99 fused {r['p50_fused_ms']:.1f}/{r['p99_fused_ms']:.1f}ms "
+        f"counts {'match' if r['counts_ok'] else 'MISMATCH'} "
+        f"rejects={r['admission']['rejected']}"
+    )
+    sys.exit(1 if failures else 0)

@@ -21,6 +21,17 @@ Gates:
     ``STEP_GATE_REDUCTION`` fewer. Counts are bit-identical across
     policies (pinned by the distributed test suites); the gate pins the
     dispatch count.
+  * **staged lanes** — the compact emitter (drained shards share one
+    cached sentinel buffer instead of staging fresh rows) never stages
+    more index lanes than the dense ``[S, bucket]`` block on ANY gate
+    config, and on ``STEP_FIXTURE`` it stages at least
+    ``STAGED_GATE_REDUCTION`` fewer — the step-bytes regression gate for
+    budget-aware packed widths.
+  * **serve** — ``bench_serve.run()``: the fused multi-graph server
+    sustains >= ``bench_serve.SERVE_GATE_RATIO`` (2x) the per-graph
+    ``count_async`` loop's graphs/sec on a 32-graph mix, every count
+    bit-identical to the jnp oracle, and admission control must reject
+    (and report) over-budget tenants in the tiny-budget scenario.
   * **build parity** — the device build's worklist size and triangle count
     equal the host build's on every gate graph (the ``build`` rows also
     carry ``build_host_s``/``build_device_s`` per-stage timings so the
@@ -57,6 +68,9 @@ GATE_GRIDS = ((1, 4), (1, 8), (2, 2), (4, 2))
 STEP_FIXTURE = ("ego-facebook", (4, 2))
 # Budget sizing: lockstep walks the longest stripe in ~this many windows.
 STEP_GATE_WINDOWS = 16
+# Compact staging must drop at least this fraction of the dense index
+# lanes on STEP_FIXTURE (measured ~0.62 there; 0.39+ on every gate config).
+STAGED_GATE_REDUCTION = 0.30
 # Resilience gates: steady-state checkpoint overhead ceiling at cadence 8,
 # on a fixture big enough that per-step work dominates the commit cost.
 RECOVERY_OVERHEAD_GATE = 0.10
@@ -185,6 +199,15 @@ def _stripe_step_row(name, grid, plan) -> dict:
         ),
         "lanes_lockstep": lock.total_lanes,
         "lanes_packed": pack.total_lanes,
+        # Budget-aware staging: drained shards' sentinel rows are served
+        # from one shared cached buffer, so only shards with live pairs in
+        # a step stage fresh index lanes. ``staged`` <= ``lanes`` always;
+        # the gap is the upload traffic the compact emitter saves.
+        "staged_lockstep": lock.staged_lanes,
+        "staged_packed": pack.staged_lanes,
+        "staged_reduction": round(
+            1.0 - pack.staged_lanes / max(pack.total_lanes, 1), 4
+        ),
     }
 
 
@@ -261,15 +284,23 @@ def run(out_path: str = "BENCH_ci.json") -> int:
 
     recovery_rows = _recovery_rows()
 
+    from benchmarks.bench_serve import SERVE_GATE_RATIO
+    from benchmarks.bench_serve import run as serve_run
+
+    serve_rows, serve_failures = serve_run()
+
     payload = {
         "gate": IMBALANCE_GATE,
         "step_gate_reduction": STEP_GATE_REDUCTION,
+        "staged_gate_reduction": STAGED_GATE_REDUCTION,
         "recovery_overhead_gate": RECOVERY_OVERHEAD_GATE,
+        "serve_gate_ratio": SERVE_GATE_RATIO,
         "table5": rows,
         "imbalance": imbalance,
         "stripe_steps": stripe_steps,
         "build": build_rows,
         "recovery": recovery_rows,
+        "serve": serve_rows,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
@@ -277,7 +308,8 @@ def run(out_path: str = "BENCH_ci.json") -> int:
           f"{len(imbalance)} imbalance configs, "
           f"{len(stripe_steps)} stripe-step configs, "
           f"{len(build_rows)} build configs, "
-          f"{len(recovery_rows)} recovery configs")
+          f"{len(recovery_rows)} recovery configs, "
+          f"{len(serve_rows)} serve configs")
 
     failures = [
         r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
@@ -293,8 +325,11 @@ def run(out_path: str = "BENCH_ci.json") -> int:
     step_failures = []
     for r in stripe_steps:
         bad = r["steps_packed"] > r["steps_lockstep"]
+        bad = bad or r["staged_packed"] > r["lanes_packed"]
+        bad = bad or r["staged_lockstep"] > r["lanes_lockstep"]
         if (r["graph"], tuple(r["grid"])) == STEP_FIXTURE:
             bad = bad or r["reduction"] < STEP_GATE_REDUCTION
+            bad = bad or r["staged_reduction"] < STAGED_GATE_REDUCTION
         if bad:
             step_failures.append(r)
         status = "FAIL" if bad else "ok"
@@ -302,7 +337,9 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"  [{status}] steps {r['graph']} {r['grid'][0]}x{r['grid'][1]} "
             f"({r['split']}, imb={r['imbalance']:.2f}): "
             f"lockstep={r['steps_lockstep']} packed={r['steps_packed']} "
-            f"(-{100 * r['reduction']:.0f}%)"
+            f"(-{100 * r['reduction']:.0f}%) "
+            f"staged={r['staged_packed']}/{r['lanes_packed']} "
+            f"(-{100 * r['staged_reduction']:.0f}%)"
         )
 
     build_failures = []
@@ -344,6 +381,20 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"counts {'match' if r['recovered_ok'] else 'MISMATCH'}"
         )
 
+    for r in serve_rows:
+        bad = r in serve_failures
+        status = "FAIL" if bad else "ok"
+        adm = r["admission"]
+        print(
+            f"  [{status}] serve {r['mix']}: "
+            f"fused={r['graphs_per_s_fused']:.0f} g/s "
+            f"unfused={r['graphs_per_s_unfused']:.0f} g/s "
+            f"ratio={r['ratio']:.2f}x (gate {SERVE_GATE_RATIO}x) "
+            f"p50/p99 {r['p50_fused_ms']:.1f}/{r['p99_fused_ms']:.1f}ms "
+            f"counts {'match' if r['counts_ok'] else 'MISMATCH'} "
+            f"rejects={adm['rejected']}/{adm['submitted']}"
+        )
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
     else:
@@ -360,8 +411,13 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"recovery gate FAILED for {len(recovery_failures)} config(s)")
     else:
         print("recovery gate passed")
+    if serve_failures:
+        print(f"serve gate FAILED for {len(serve_failures)} config(s)")
+    else:
+        print("serve gate passed")
     return 1 if (
         failures or step_failures or build_failures or recovery_failures
+        or serve_failures
     ) else 0
 
 

@@ -9,16 +9,25 @@ Public API:
     tcim_latency_energy             MRAM latency/energy analytical model
 """
 from repro.core.bitmat import bitpack_matrix, bitunpack_matrix, popcount_u32
-from repro.core.executor import CountFuture, EXECUTOR_MODES, Executor, ExecutorPool
+from repro.core.executor import (
+    CountFuture,
+    EXECUTOR_MODES,
+    Executor,
+    ExecutorPool,
+    MultiCountFuture,
+    MultiGraphExecutor,
+)
 from repro.core.plan import (
     PLACEMENTS,
     SCHEDULES,
     SPLITS,
     DeviceTopology,
     ExecutionPlan,
+    FusionPlan,
     StripeSchedule,
     StripeStep,
     WorkStripe,
+    plan_fusion,
     build_stripe_schedule,
     balance_grid_bounds,
     bottleneck_range_bounds,
@@ -69,15 +78,19 @@ __all__ = [
     "CountFuture",
     "Executor",
     "ExecutorPool",
+    "MultiCountFuture",
+    "MultiGraphExecutor",
     "EXECUTOR_MODES",
     "PLACEMENTS",
     "SCHEDULES",
     "SPLITS",
     "DeviceTopology",
     "ExecutionPlan",
+    "FusionPlan",
     "StripeSchedule",
     "StripeStep",
     "WorkStripe",
+    "plan_fusion",
     "build_stripe_schedule",
     "balance_grid_bounds",
     "bottleneck_range_bounds",

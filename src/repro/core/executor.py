@@ -77,21 +77,24 @@ from __future__ import annotations
 import collections
 import functools
 import hashlib
+import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sbf as sbf_mod
-from repro.core.plan import clamp_chunk_pairs, pow2_ceil as _pow2_ceil
+from repro.core.plan import clamp_chunk_pairs, plan_fusion, pow2_ceil as _pow2_ceil
 from repro.kernels import ops, ref
 from repro.kernels.common import on_cpu
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
 
 __all__ = [
     "CountFuture",
+    "MultiCountFuture",
     "Executor",
     "ExecutorPool",
+    "MultiGraphExecutor",
     "EXECUTOR_MODES",
     "staged_uploads",
 ]
@@ -123,11 +126,18 @@ class CountFuture:
     silently dropped, and the resilient drivers resume from that prefix.
     """
 
-    __slots__ = ("_totals", "_value")
+    __slots__ = ("_totals", "_value", "__weakref__")
 
     def __init__(self, totals):
         self._totals = list(totals)
         self._value: int | None = None
+
+    @property
+    def resolved(self) -> bool:
+        """True once no device buffers are still referenced — either
+        ``result()`` ran or the dispatch held nothing (empty worklist).
+        Pools use this to tell in-flight work from evictable executors."""
+        return not self._totals
 
     def result(self) -> int:
         if self._totals is not None:
@@ -321,6 +331,31 @@ class Executor:
             donate="none" if on_cpu() else "acc",
             block_pairs=block_pairs,
         )
+        # Weakrefs to unresolved CountFutures. While any is alive the
+        # executor's device stores back in-flight dispatches, so pools must
+        # not free them (``busy``); resolved/collected futures prune lazily.
+        self._pending: list = []
+
+    def _track(self, fut: "CountFuture") -> "CountFuture":
+        self._pending = [
+            r for r in self._pending
+            if (f := r()) is not None and not f.resolved
+        ]
+        if not fut.resolved:
+            self._pending.append(weakref.ref(fut))
+        return fut
+
+    @property
+    def busy(self) -> bool:
+        """True while a dispatched ``CountFuture`` still awaits ``result()``.
+
+        Evicting (freeing the stores of) a busy executor could invalidate
+        the pending readback; ``ExecutorPool`` defers eviction instead."""
+        self._pending = [
+            r for r in self._pending
+            if (f := r()) is not None and not f.resolved
+        ]
+        return bool(self._pending)
 
     @staticmethod
     def _adopt_store(store, pad_stores_pow2: bool):
@@ -434,14 +469,14 @@ class Executor:
         if p == 0 or num_real == 0:
             return CountFuture([])
         if isinstance(row_idx, jax.Array):
-            return self._accumulate(
+            return self._track(self._accumulate(
                 self._resident_chunks(row_idx, col_idx),
                 self._chunk_jit_resident,
                 num_real if num_real is not None else p,
-            )
-        return self._accumulate(
+            ))
+        return self._track(self._accumulate(
             self._device_chunks(row_idx, col_idx), self._chunk_jit, p
-        )
+        ))
 
     def execute_indices(
         self, row_idx, col_idx, *, num_real: int | None = None
@@ -484,6 +519,9 @@ def sbf_content_key(sb: sbf_mod.SlicedBitmap) -> str:
     """
     if getattr(sb, "content_key", None) is not None:
         return sb.content_key
+    cached = getattr(sb, "_store_digest", None)
+    if cached is not None:
+        return cached
     h = hashlib.blake2b(digest_size=16)
     h.update(
         repr(
@@ -496,7 +534,12 @@ def sbf_content_key(sb: sbf_mod.SlicedBitmap) -> str:
     )
     h.update(np.ascontiguousarray(sb.row_slice_data).tobytes())
     h.update(np.ascontiguousarray(sb.col_slice_data).tobytes())
-    return h.hexdigest()
+    digest = h.hexdigest()
+    # Stores are treated as immutable once built; memoize the digest on the
+    # (frozen, slot-free) dataclass so a serving loop re-keying the same
+    # objects every round pays the hash once, not per round.
+    object.__setattr__(sb, "_store_digest", digest)
+    return digest
 
 
 class ExecutorPool:
@@ -577,9 +620,24 @@ class ExecutorPool:
         )
         self._entries[key] = (tkey, ex)
         self._entries.move_to_end(key)
-        while len(self._entries) > self.max_graphs:
-            self._entries.popitem(last=False)  # evict LRU graph + its stores
+        self._evict()
         return ex
+
+    def _evict(self) -> None:
+        """Drop LRU graphs above ``max_graphs`` — but never one whose
+        executor is ``busy`` (a dispatched ``CountFuture`` still pending):
+        freeing its device stores would invalidate the deferred readback.
+        Busy executors are skipped (defer-free — the pool may transiently
+        exceed ``max_graphs``) and reaped on the next ``get`` once their
+        futures resolve."""
+        while len(self._entries) > self.max_graphs:
+            keys = list(self._entries)[:-1]  # never evict the MRU entry
+            victim = next(
+                (k for k in keys if not self._entries[k][1].busy), None
+            )
+            if victim is None:
+                return  # everything in-flight; retry on a later get()
+            del self._entries[victim]
 
     def count_async(
         self,
@@ -630,4 +688,220 @@ class ExecutorPool:
             "misses": self.misses,
             "trace_groups": len(groups),
             "max_group": max(groups.values(), default=0),
+        }
+
+
+class MultiCountFuture:
+    """A fused multi-graph dispatch whose host readback is deferred.
+
+    Holds the single ``[padded_graphs]`` device vector of per-graph
+    subtotals; ``result()`` is ONE device->host transfer returning the real
+    graphs' counts as a tuple of Python ints (idempotent, cached).
+    """
+
+    __slots__ = ("_totals", "_num", "_value")
+
+    def __init__(self, totals, num_graphs: int):
+        self._totals = totals
+        self._num = int(num_graphs)
+        self._value: tuple[int, ...] | None = None
+
+    @property
+    def resolved(self) -> bool:
+        return self._totals is None
+
+    def result(self) -> tuple[int, ...]:
+        if self._totals is not None:
+            host = np.asarray(self._totals)  # the one transfer
+            self._value = tuple(int(t) for t in host[: self._num])
+            self._totals = None
+        return self._value
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_step_fn(bucket: int, interpret: bool | None, use_kernel: bool | None):
+    """Module-level jitted fused step: [G*bucket] indices -> [G] subtotals.
+
+    Keyed by the segment ``bucket`` (static: it shapes the reduction), so
+    every MultiGraphExecutor — and every fused batch whose graphs share a
+    bucket — runs one compiled program. No donation: cached batches
+    re-execute their resident index blocks.
+    """
+
+    def step(row_data, col_data, ridx, cidx):
+        return ops.popcount_and_gather_segment_totals(
+            row_data, col_data, ridx, cidx,
+            bucket=bucket, use_kernel=use_kernel, interpret=interpret,
+        )
+
+    return jax.jit(step)
+
+
+def _worklist_key(wl) -> str:
+    """Digest of a worklist's pair positions (fused-batch cache keying).
+
+    Store content alone is not enough — a caller may legitimately count a
+    partial worklist against the same stores — so batch keys pair each
+    graph's ``sbf_content_key`` with this digest. Worklists fused here are
+    small (the admission bucket bound), so the hash cost is noise.
+    """
+    cached = getattr(wl, "_pairs_digest", None)
+    if cached is not None:
+        return cached
+    h = hashlib.blake2b(digest_size=16)
+    rp = np.ascontiguousarray(np.asarray(wl.pair_row_pos, dtype=np.int64))
+    cp = np.ascontiguousarray(np.asarray(wl.pair_col_pos, dtype=np.int64))
+    h.update(np.int64(len(rp)).tobytes())
+    h.update(rp.tobytes())
+    h.update(cp.tobytes())
+    digest = h.hexdigest()
+    object.__setattr__(wl, "_pairs_digest", digest)
+    return digest
+
+
+class _FusedBatch:
+    """Device-resident state of one fused batch: stacked stores + index
+    block + the shared jitted step. Re-dispatching is one jit call."""
+
+    __slots__ = ("plan", "row_data", "col_data", "ridx", "cidx", "_step")
+
+    def __init__(self, plan, row_data, col_data, ridx, cidx, step):
+        self.plan = plan
+        self.row_data = row_data
+        self.col_data = col_data
+        self.ridx = ridx
+        self.cidx = cidx
+        self._step = step
+
+    def count_async(self) -> MultiCountFuture:
+        totals = self._step(self.row_data, self.col_data, self.ridx, self.cidx)
+        return MultiCountFuture(totals, self.plan.num_graphs)
+
+
+class MultiGraphExecutor:
+    """Fused execute stage for MANY small graphs per dispatch.
+
+    The serving-side analogue of TCIM's array packing: an ``ExecutorPool``
+    drains a fleet one dispatch per graph; this executor stacks a batch of
+    small graphs' stores and pow2-bucketed worklists (``core.plan
+    .plan_fusion``) and retires the whole batch with ONE jitted call that
+    returns per-graph int32 subtotals (``kernels.ops
+    .popcount_and_gather_segment_totals``). Big graphs should not come
+    here — ``max_fused_pairs`` bounds the per-graph segment, and
+    ``launch.tc_serve`` routes anything larger solo.
+
+    Batches are cached LRU by content (store digests + worklist digests), so
+    a recurring tenant mix re-counts with zero staging: one cached dispatch,
+    one readback, regardless of batch size. Shapes are pow2-padded on every
+    axis (segment bucket, graph count, stacked store rows), so distinct
+    batches that land in the same buckets share the compiled step — the
+    fused path's single-trace property, asserted in tests.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batches: int = 8,
+        max_fused_pairs: int = 1 << 16,
+        interpret: bool | None = None,
+        use_kernel: bool | None = None,
+    ):
+        if max_batches < 1:
+            raise ValueError(f"max_batches must be >= 1, got {max_batches}")
+        self.max_batches = max_batches
+        self.max_fused_pairs = int(max_fused_pairs)
+        self._interpret = interpret
+        self._use_kernel = use_kernel
+        self._batches: collections.OrderedDict[tuple, _FusedBatch] = (
+            collections.OrderedDict()
+        )
+        self._steps: dict[int, object] = {}  # bucket -> jitted step
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def trace_count(self) -> int:
+        """Traces across every fused step this executor has used (see
+        ``Executor.trace_count`` for the caveats)."""
+        try:
+            return sum(int(s._cache_size()) for s in self._steps.values())
+        except Exception:
+            return -1
+
+    def _step_for(self, bucket: int):
+        step = self._steps.get(bucket)
+        if step is None:
+            step = _fused_step_fn(bucket, self._interpret, self._use_kernel)
+            self._steps[bucket] = step
+        return step
+
+    def plan(self, jobs):
+        """The ``FusionPlan`` this executor would run ``jobs`` under —
+        exposed so admission control can cost a batch before committing."""
+        # max_fused_pairs bounds each graph's worklist; the shared bucket is
+        # its pow2 ceiling (admission accepts pairs == max_fused_pairs, and
+        # the planner rounds the largest worklist up).
+        return plan_fusion(
+            jobs, max_bucket=_pow2_ceil(max(self.max_fused_pairs, 1))
+        )
+
+    def count_fused_async(self, jobs) -> MultiCountFuture:
+        """Dispatch one fused count over ``jobs`` (list of host
+        ``(SlicedBitmap, Worklist)``); defer the single host readback.
+
+        Raises ``ValueError`` (via ``plan_fusion``) when a job exceeds the
+        fused segment bound or mixes word widths — admission control filters
+        those out before calling.
+        """
+        key = tuple(
+            (sbf_content_key(sb), _worklist_key(wl)) for sb, wl in jobs
+        )
+        batch = self._batches.get(key)
+        if batch is not None:
+            self.hits += 1
+            self._batches.move_to_end(key)
+            return batch.count_async()
+        self.misses += 1
+        plan = self.plan(jobs)
+        row_data = _pad_rows_pow2(
+            np.concatenate(
+                [np.asarray(sb.row_slice_data) for sb, _ in jobs]
+            ) if plan.row_rows else
+            np.zeros((0, plan.words_per_slice), np.uint32)
+        )
+        col_data = _pad_rows_pow2(
+            np.concatenate(
+                [np.asarray(sb.col_slice_data) for sb, _ in jobs]
+            ) if plan.col_rows else
+            np.zeros((0, plan.words_per_slice), np.uint32)
+        )
+        batch = _FusedBatch(
+            plan,
+            jax.device_put(jnp.asarray(row_data)),
+            jax.device_put(jnp.asarray(col_data)),
+            jax.device_put(plan.row_idx),
+            jax.device_put(plan.col_idx),
+            self._step_for(plan.bucket),
+        )
+        self._batches[key] = batch
+        while len(self._batches) > self.max_batches:
+            self._batches.popitem(last=False)
+        return batch.count_async()
+
+    def count_fused(self, jobs) -> tuple[int, ...]:
+        """Blocking convenience over ``count_fused_async``."""
+        return self.count_fused_async(jobs).result()
+
+    def __len__(self) -> int:
+        return len(self._batches)
+
+    def clear(self) -> None:
+        self._batches.clear()
+
+    def stats(self) -> dict:
+        return {
+            "batches": len(self._batches),
+            "hits": self.hits,
+            "misses": self.misses,
+            "buckets": sorted(self._steps),
         }

@@ -64,6 +64,9 @@ __all__ = [
     "StripeStep",
     "StripeSchedule",
     "build_stripe_schedule",
+    "sentinel_row",
+    "FusionPlan",
+    "plan_fusion",
     "plan_execution",
     "remaining_worklist",
     "clamp_chunk_pairs",
@@ -350,6 +353,20 @@ class StripeSchedule:
         the host->device index traffic is 8 bytes per lane."""
         return sum(self.num_shards * s.bucket for s in self.steps)
 
+    @property
+    def staged_lanes(self) -> int:
+        """Index lanes ``emit_compact`` actually materializes host-side.
+
+        A shard with ``lens[s] == 0`` at a step is drained (packed) or
+        idling (lockstep): its row of the ``[S, bucket]`` window is all
+        sentinel, and the compact emission serves it from one shared cached
+        buffer per bucket instead of re-filling and re-copying it every
+        remaining step. ``total_lanes - staged_lanes`` is the budget-aware
+        saving; the CI step gate regression-tests it."""
+        return sum(
+            sum(1 for n in s.lens if n) * s.bucket for s in self.steps
+        )
+
     def cursor_after(self, num_steps: int) -> tuple[int, ...]:
         """Per-shard consumed-pair offsets after the first ``num_steps``.
 
@@ -392,6 +409,55 @@ class StripeSchedule:
                     ridx[s, :n] = stripe.row_pos[lo : lo + n]
                     cidx[s, :n] = stripe.col_pos[lo : lo + n]
             yield ridx.reshape(-1), cidx.reshape(-1)
+
+    def emit_compact(self, stripes: tuple["WorkStripe", ...], start_step: int = 0):
+        """Yield per-step ``(bucket, row_rows, col_rows)`` — the budget-aware
+        emission. ``row_rows``/``col_rows`` are length-``num_shards`` lists
+        of ``[bucket]`` int32 rows of the step's index window; a drained or
+        idle shard's all-sentinel row is the shared read-only buffer from
+        ``sentinel_row(bucket)``, materialized once per bucket per process
+        instead of refilled per step (see ``staged_lanes``). Assembling a
+        device array from these rows is bit-identical to ``emit``'s dense
+        flat window — ``distributed.tc`` does exactly that, per shard."""
+        if len(stripes) != self.num_shards:
+            raise ValueError(
+                f"schedule built for {self.num_shards} stripes, got "
+                f"{len(stripes)}"
+            )
+        for step in self.steps[start_step:]:
+            sent = sentinel_row(step.bucket)
+            row_rows: list[np.ndarray] = []
+            col_rows: list[np.ndarray] = []
+            for s, stripe in enumerate(stripes):
+                lo, n = step.starts[s], step.lens[s]
+                if n == 0:
+                    row_rows.append(sent)
+                    col_rows.append(sent)
+                    continue
+                r = np.full(step.bucket, -1, dtype=np.int32)
+                c = np.full(step.bucket, -1, dtype=np.int32)
+                r[:n] = stripe.row_pos[lo : lo + n]
+                c[:n] = stripe.col_pos[lo : lo + n]
+                row_rows.append(r)
+                col_rows.append(c)
+            yield step.bucket, row_rows, col_rows
+
+
+_SENTINEL_ROWS: dict[int, np.ndarray] = {}
+
+
+def sentinel_row(bucket: int) -> np.ndarray:
+    """The shared all-``-1`` ``[bucket]`` int32 row (read-only, cached).
+
+    ``StripeSchedule.emit_compact`` hands this one buffer out for every
+    drained shard at every step, so sentinel lanes cost zero host fills and
+    zero fresh allocations after the first step that needs the bucket."""
+    row = _SENTINEL_ROWS.get(bucket)
+    if row is None:
+        row = np.full(bucket, -1, dtype=np.int32)
+        row.setflags(write=False)
+        _SENTINEL_ROWS[bucket] = row
+    return row
 
 
 def _packed_window(remaining: list[int], budget: int) -> int:
@@ -458,6 +524,141 @@ def build_stripe_schedule(
     return StripeSchedule(
         policy=policy, num_shards=num_shards, budget=budget, steps=tuple(steps)
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    """Cross-graph fusion: many small graphs' worklists as ONE index block.
+
+    The multi-tenant analogue of TCIM's array packing: instead of one
+    dispatch (and one closing reduction) per graph, ``G`` graphs' pow2-
+    bucketed worklists are stacked into a shared ``[G, bucket]`` index
+    block — each graph owns one ``bucket``-wide segment, sentinel-padded —
+    and their slice stores are stacked row-wise with per-graph segment
+    offsets baked into the indices. One
+    ``popcount_and_gather_segment_totals`` dispatch then returns every
+    graph's int32 subtotal (``kernels/tc_gather_popcount.py``).
+
+    ``G`` is itself padded to a power of two with all-sentinel segments
+    (``padded_graphs``), and the executor pads the stacked store rows to
+    pow2 buckets, so fused batches retrace only per (bucket, padded_graphs,
+    store bucket, words) combination — admitting a second batch with equal
+    buckets adds zero traces.
+    """
+
+    num_graphs: int  # real graphs fused (leading segments)
+    padded_graphs: int  # pow2 >= num_graphs; tail segments all-sentinel
+    bucket: int  # pow2 pair width of every graph's segment
+    words_per_slice: int
+    row_offsets: tuple[int, ...]  # graph g's base row in the stacked row store
+    col_offsets: tuple[int, ...]
+    row_rows: int  # stacked row-store rows (before the executor's pow2 pad)
+    col_rows: int
+    row_idx: np.ndarray  # [padded_graphs * bucket] int32, store-global
+    col_idx: np.ndarray
+    real_pairs: tuple[int, ...]  # per-graph non-sentinel pair counts
+    stats: dict
+
+    @property
+    def index_lanes(self) -> int:
+        return self.padded_graphs * self.bucket
+
+    @property
+    def staged_index_bytes(self) -> int:
+        """Host->device bytes of the index block (row + col int32 lanes)."""
+        return self.index_lanes * 8
+
+    @property
+    def store_bytes(self) -> int:
+        """Device bytes of the stacked stores after the executor's pow2 row
+        pad — with ``staged_index_bytes``, the admission-control footprint."""
+        w = self.words_per_slice * 4
+        return (pow2_ceil(max(self.row_rows, 1))
+                + pow2_ceil(max(self.col_rows, 1))) * w
+
+
+def plan_fusion(
+    jobs,
+    *,
+    max_bucket: int | None = None,
+    pad_graphs_pow2: bool = True,
+) -> FusionPlan:
+    """Stack ``jobs`` — a sequence of host ``(SlicedBitmap, Worklist)`` —
+    into a :class:`FusionPlan` for one shared dispatch.
+
+    Every job must share ``words_per_slice`` (the stores stack row-wise into
+    one ``[R, W]`` array). ``bucket`` is the pow2 ceiling of the largest
+    worklist; it must satisfy the per-segment int32 bound ``bucket *
+    words_per_slice <= INT32_SAFE_WORDS`` and, if given, ``max_bucket`` —
+    callers route graphs that exceed either solo (``launch.tc_serve``'s
+    admission does both checks up front).
+    """
+    jobs = list(jobs)
+    if not jobs:
+        raise ValueError("plan_fusion needs at least one (sbf, worklist) job")
+    wps = int(jobs[0][0].words_per_slice)
+    for i, (sb, _) in enumerate(jobs):
+        if int(sb.words_per_slice) != wps:
+            raise ValueError(
+                f"job {i} has words_per_slice={int(sb.words_per_slice)}, "
+                f"fusion group requires {wps}; group jobs by word width"
+            )
+    pairs = [int(wl.num_pairs) for _, wl in jobs]
+    bucket = pow2_ceil(max(max(pairs), 1))
+    safe = INT32_SAFE_WORDS // max(wps, 1)
+    if bucket > safe:
+        raise ValueError(
+            f"fused bucket {bucket} x {wps} words busts the per-segment "
+            f"int32 bound (max safe pairs: {safe}); count the largest "
+            "graph solo"
+        )
+    if max_bucket is not None and bucket > max_bucket:
+        raise ValueError(
+            f"fused bucket {bucket} exceeds max_bucket={max_bucket}; "
+            "route the largest graph solo"
+        )
+    g = len(jobs)
+    g_pad = pow2_ceil(g) if pad_graphs_pow2 else g
+    row_idx = np.full((g_pad, bucket), -1, dtype=np.int32)
+    col_idx = np.full((g_pad, bucket), -1, dtype=np.int32)
+    row_offsets, col_offsets = [], []
+    row_base = col_base = 0
+    for i, (sb, wl) in enumerate(jobs):
+        row_offsets.append(row_base)
+        col_offsets.append(col_base)
+        n = pairs[i]
+        if n:
+            row_idx[i, :n] = (
+                np.asarray(wl.pair_row_pos[:n], dtype=np.int64) + row_base
+            )
+            col_idx[i, :n] = (
+                np.asarray(wl.pair_col_pos[:n], dtype=np.int64) + col_base
+            )
+        row_base += int(sb.row_slice_data.shape[0])
+        col_base += int(sb.col_slice_data.shape[0])
+    plan = FusionPlan(
+        num_graphs=g,
+        padded_graphs=g_pad,
+        bucket=bucket,
+        words_per_slice=wps,
+        row_offsets=tuple(row_offsets),
+        col_offsets=tuple(col_offsets),
+        row_rows=row_base,
+        col_rows=col_base,
+        row_idx=row_idx.reshape(-1),
+        col_idx=col_idx.reshape(-1),
+        real_pairs=tuple(pairs),
+        stats={
+            "num_graphs": g,
+            "padded_graphs": g_pad,
+            "bucket": bucket,
+            "real_pairs": sum(pairs),
+            "sentinel_lanes": g_pad * bucket - sum(pairs),
+            "reason": f"{g} graphs fused into one [{g_pad}, {bucket}] "
+            "segment block; one dispatch, per-graph subtotals",
+        },
+    )
+    return plan
 
 
 @dataclasses.dataclass(frozen=True)

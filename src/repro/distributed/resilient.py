@@ -292,7 +292,10 @@ class ResilienceConfig:
     overhead (each commit is one stacked scalar readback + an async cursor
     write; the CI gate holds the cadence-8 overhead under 10%).
     ``lose_devices`` is the simulated blast radius per failure (0 = the
-    failed device is replaced: recover on the same-size grid).
+    failed device is replaced: recover on the same-size grid). A sequence
+    gives the blast radius per *successive* failure — ``(4, 2, 1)`` soaks a
+    cascading 8 -> 4 -> 2 -> 1 shrink; failures past the end reuse the last
+    entry.
     ``monitor`` opts into per-step timing (blocks each step — the
     observability tradeoff) and, with ``monitor_interrupts``, routes a
     straggler flag through the same checkpoint-and-remesh path.
@@ -305,7 +308,17 @@ class ResilienceConfig:
     monitor: object | None = None  # runtime.fault.StragglerMonitor
     monitor_interrupts: bool = True
     max_failures: int = 2
-    lose_devices: int = 1
+    lose_devices: int | tuple[int, ...] = 1
+
+    def blast_radius(self, failure: int) -> int:
+        """Devices lost by the ``failure``-th interrupt (1-based)."""
+        lose = self.lose_devices
+        if isinstance(lose, int):
+            return lose
+        seq = tuple(int(x) for x in lose)
+        if not seq:
+            return 0
+        return seq[min(failure, len(seq)) - 1]
 
 
 def _build_executor(
@@ -455,8 +468,9 @@ def resilient_tc_count(
             if info["failures"] > config.max_failures:
                 raise
             t0 = time.perf_counter()
-            if config.lose_devices > 0:
-                devices = devices[: len(devices) - config.lose_devices]
+            lose = config.blast_radius(info["failures"])
+            if lose > 0:
+                devices = devices[: len(devices) - lose]
             if not devices:
                 raise
             ex, plan, base_total, attempt = _recover(

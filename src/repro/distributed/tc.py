@@ -235,20 +235,48 @@ class _StripeScheduleDriver:
             [s.num_pairs for s in plan.stripes], budget, policy=self.schedule
         )
 
+    def _staged_windows(
+        self, sched: StripeSchedule, plan: ExecutionPlan, start_step: int = 0
+    ):
+        """Double-buffered device index windows via the *compact* emission.
+
+        ``StripeSchedule.emit_compact`` hands back per-shard rows, with
+        every drained shard's all-sentinel row served from one shared
+        cached buffer — so once a shard's stripe is exhausted its rows are
+        never re-filled or re-copied host-side again (the budget-aware
+        packed-width fix; ``staged_lanes`` vs ``total_lanes`` quantifies
+        it, gated in CI). Each device then materializes its own row through
+        ``jax.make_array_from_callback`` under the same flat sharding the
+        dense ``device_put`` used — bit-identical step inputs.
+        """
+        flat = NamedSharding(self.mesh, P(self.axis_names))
+
+        def put(step):
+            bucket, row_rows, col_rows = step
+            shape = (len(row_rows) * bucket,)
+
+            def mk(rows):
+                return jax.make_array_from_callback(
+                    shape,
+                    flat,
+                    lambda idx: rows[(idx[0].start or 0) // bucket],
+                )
+
+            return mk(row_rows), mk(col_rows)
+
+        return staged_uploads(
+            sched.emit_compact(plan.stripes, start_step),
+            put,
+            double_buffer=self.double_buffer,
+        )
+
     def count_plan_async(self, plan: ExecutionPlan) -> CountFuture:
         """Dispatch every scheduled psum step; defer the exact host sum."""
         self._check_plan(plan)
         sched = self.stripe_schedule(plan)
         if sched.num_steps == 0:
             return CountFuture([])  # empty worklist: nothing dispatched
-        flat = NamedSharding(self.mesh, P(self.axis_names))
-        staged = staged_uploads(
-            sched.emit(plan.stripes),
-            lambda rc: (
-                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
-            ),
-            double_buffer=self.double_buffer,
-        )
+        staged = self._staged_windows(sched, plan)
         return CountFuture(
             [
                 self._step(self.row_store, self.col_store, ridx, cidx)
@@ -339,14 +367,7 @@ class _StripeScheduleDriver:
                 )
                 info["checkpoints"] += 1
 
-        flat = NamedSharding(self.mesh, P(self.axis_names))
-        staged = staged_uploads(
-            sched.emit(plan.stripes, start_step),
-            lambda rc: (
-                jax.device_put(rc[0], flat), jax.device_put(rc[1], flat)
-            ),
-            double_buffer=self.double_buffer,
-        )
+        staged = self._staged_windows(sched, plan, start_step)
         step_i = start_step
         try:
             for ridx, cidx in staged:

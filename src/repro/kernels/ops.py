@@ -15,6 +15,8 @@ from repro.kernels.slice_and_popcount import items_pallas, total_pallas
 from repro.kernels.tc_bitgemm import bitgemm_pallas
 from repro.kernels.tc_dense_mxu import dense_mxu_tc_pallas
 from repro.kernels.tc_gather_popcount import (
+    gather_segment_totals_pallas,
+    gather_segment_totals_reference,
     gather_total_pallas,
     gather_total_reference,
 )
@@ -23,6 +25,7 @@ __all__ = [
     "popcount_and_items",
     "popcount_and_total",
     "popcount_and_gather_total",
+    "popcount_and_gather_segment_totals",
     "bitgemm",
     "dense_mxu_tc",
     "INT32_SAFE_WORDS",
@@ -161,6 +164,58 @@ def popcount_and_gather_total(
             block_pairs=1 if block_pairs is None else block_pairs,
         )
     return gather_total_reference(row_data, col_data, row_idx, col_idx)
+
+
+def popcount_and_gather_segment_totals(
+    row_data: jax.Array,
+    col_data: jax.Array,
+    row_idx: jax.Array,
+    col_idx: jax.Array,
+    *,
+    bucket: int,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-graph int32 subtotals over a fused multi-graph index block.
+
+    The cross-graph serving primitive: ``row_idx``/``col_idx`` are ``G``
+    back-to-back ``bucket``-wide worklist segments (one per fused graph,
+    sentinel-padded, indices shifted into the stacked stores), and one
+    dispatch returns the ``[G]`` per-graph totals — a segment-summed
+    accumulator instead of ``popcount_and_gather_total``'s single scalar.
+
+    Each segment accumulates independently, so the int32 bound is per
+    segment: ``bucket * words_per_slice * 32`` must fit int32.
+    """
+    assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
+    p = row_idx.shape[0]
+    w = row_data.shape[1]
+    if bucket < 1 or p % bucket:
+        raise ValueError(
+            f"{p} fused pairs do not tile into bucket={bucket} segments"
+        )
+    if p == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if bucket * w > INT32_SAFE_WORDS:
+        raise ValueError(
+            f"fused segment of {bucket} pairs x {w} words could overflow "
+            f"the int32 accumulator (max safe words: {INT32_SAFE_WORDS}); "
+            "route the graph solo with a smaller chunk_pairs"
+        )
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return gather_segment_totals_pallas(
+            row_data,
+            col_data,
+            row_idx.astype(jnp.int32),
+            col_idx.astype(jnp.int32),
+            bucket=bucket,
+            interpret=_interpret(interpret),
+        )
+    return gather_segment_totals_reference(
+        row_data, col_data, row_idx, col_idx, bucket=bucket
+    )
 
 
 def bitgemm(

@@ -57,6 +57,8 @@ from repro.kernels.common import swar_popcount_u32
 __all__ = [
     "gather_total_pallas",
     "gather_total_reference",
+    "gather_segment_totals_pallas",
+    "gather_segment_totals_reference",
     "modeled_hbm_bytes",
 ]
 
@@ -204,6 +206,109 @@ def gather_total_pallas(
         interpret=interpret,
     )(row_idx, col_idx, row_data, col_data)
     return out[0, 0]
+
+
+def _gather_segment_kernel(
+    ridx_ref, cidx_ref, row_ref, col_ref, out_ref, *, bucket: int
+):
+    """One pair per grid step, accumulated into its graph's output segment.
+
+    The cross-graph fused variant of ``_gather_total_kernel``: the flat pair
+    index arrays are ``G`` back-to-back ``bucket``-wide segments (one per
+    fused graph), and the out BlockSpec's index map routes step ``p`` to
+    output row ``p // bucket`` — the grid walks segments in order, so each
+    output row is initialized on its segment's first step and accumulated
+    for the rest, giving ``G`` independent int32 subtotals in ONE dispatch.
+    """
+    p = pl.program_id(0)
+    valid = (ridx_ref[p] >= 0) & (cidx_ref[p] >= 0)
+    x = row_ref[...] & col_ref[...]
+    partial = jnp.where(valid, swar_popcount_u32(x).sum(), 0)
+    lane = p % bucket
+
+    @pl.when(lane == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(lane != 0)
+    def _acc():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bucket", "interpret"))
+def gather_segment_totals_pallas(
+    row_data: jax.Array,  # [R, W] uint32 — stacked row-side slice stores
+    col_data: jax.Array,  # [C, W] uint32 — stacked col-side slice stores
+    row_idx: jax.Array,  # [G * bucket] int32, store-global (< 0 = no-op)
+    col_idx: jax.Array,  # [G * bucket] int32, store-global (< 0 = no-op)
+    *,
+    bucket: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-segment popcount totals over a fused multi-graph index block.
+
+    ``row_idx``/``col_idx`` hold ``G = len(row_idx) // bucket`` graphs'
+    worklists, each padded to the shared pow2 ``bucket`` with the ``-1``
+    sentinel and shifted into the stacked stores' coordinates. Returns the
+    ``[G]`` int32 per-graph subtotals of one dispatch. Each segment's worst
+    case ``bucket * W * 32`` must fit int32 (callers bound it — see
+    ``kernels/ops.py``).
+    """
+    p = row_idx.shape[0]
+    assert row_idx.shape == col_idx.shape, (row_idx.shape, col_idx.shape)
+    assert row_data.ndim == col_data.ndim == 2
+    w = row_data.shape[1]
+    assert col_data.shape[1] == w, (row_data.shape, col_data.shape)
+    if bucket < 1 or p % bucket:
+        raise ValueError(f"{p} pairs do not tile into bucket={bucket} segments")
+    g = p // bucket
+    if g == 0:
+        return jnp.zeros((0,), jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ri[i], 0), 0)),
+            pl.BlockSpec((1, w), lambda i, ri, ci: (jnp.maximum(ci[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, ri, ci: (i // bucket, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_segment_kernel, bucket=bucket),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, 1), jnp.int32),
+        interpret=interpret,
+    )(row_idx, col_idx, row_data, col_data)
+    return out[:, 0]
+
+
+def gather_segment_totals_reference(
+    row_data: jax.Array,
+    col_data: jax.Array,
+    row_idx: jax.Array,
+    col_idx: jax.Array,
+    *,
+    bucket: int,
+) -> jax.Array:
+    """Vectorized mirror of ``gather_segment_totals_pallas`` (same contract).
+
+    One fused gather + AND + SWAR popcount over all ``G * bucket`` lanes,
+    segment-summed by a ``[G, bucket]`` reshape — the executor's CPU path
+    for cross-graph fused dispatch, sharing ``gather_total_reference``'s
+    negative-index no-op semantics exactly.
+    """
+    p = row_idx.shape[0]
+    if bucket < 1 or p % bucket:
+        raise ValueError(f"{p} pairs do not tile into bucket={bucket} segments")
+    g = p // bucket
+    if g == 0:
+        return jnp.zeros((0,), jnp.int32)
+    mask = (row_idx >= 0) & (col_idx >= 0)
+    rows = jnp.take(row_data, jnp.maximum(row_idx, 0), axis=0)
+    cols = jnp.take(col_data, jnp.maximum(col_idx, 0), axis=0)
+    pc = swar_popcount_u32(rows & cols).sum(axis=1)
+    per_pair = jnp.where(mask, pc, 0)
+    return per_pair.reshape(g, bucket).sum(axis=1, dtype=jnp.int32)
 
 
 def gather_total_reference(

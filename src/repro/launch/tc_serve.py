@@ -1,0 +1,330 @@
+"""Triangle-count-as-a-service: a multi-tenant batch front end.
+
+The paper's accelerator wins by packing many independent AND+BitCount
+operations into each in-memory step; the serving analogue is dispatch
+amortization. A fleet of small graphs used to pay one dispatch (and one
+close) per graph even though ``count_async`` overlapped them — this front
+end drains whole batches of small tenants through ONE fused dispatch via
+``core.executor.MultiGraphExecutor`` (cross-graph step fusion: stacked
+stores + a shared ``[G, bucket]`` segment index block, per-graph int32
+subtotals), while big graphs still go solo through the placement-aware
+paths (``core.plan.plan_execution`` -> pooled replicated executor, or the
+sharded executors when a mesh is configured).
+
+Pipeline per ``drain()`` wave:
+
+  1. **Admission control** — each request's device footprint (pow2-padded
+     store bytes + staged index bytes) is charged against
+     ``memory_budget_bytes``. Requests that can never fit are rejected
+     (reported, never silently dropped); the rest are admitted FIFO until
+     the wave's budget fills, and the remainder waits for the next wave.
+  2. **Placement** — admitted requests small enough for fusion (pairs
+     within ``max_fused_pairs``, matching word width) are grouped and
+     batched; everything else is planned solo via ``plan_execution``
+     (replicated on one device, ``sharded_cols``/``sharded_2d`` through
+     ``distributed_tc_count_async`` when a mesh is available).
+  3. **Fused dispatch** — every batch and solo is dispatched before any
+     result is read back, so closes overlap the next dispatches; counts
+     are bit-identical to the per-graph loop (asserted in tests and gated
+     in ``benchmarks/bench_serve.py``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+from repro.core import sbf as sbf_mod
+from repro.core.executor import ExecutorPool, MultiGraphExecutor
+from repro.core.plan import (
+    DEFAULT_SHARD_ABOVE_BYTES,
+    DeviceTopology,
+    plan_execution,
+    pow2_ceil,
+)
+from repro.kernels.ops import INT32_SAFE_WORDS
+
+__all__ = ["ServeConfig", "ServeRequest", "ServeResult", "TCServer"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Policy knobs for :class:`TCServer`.
+
+    ``memory_budget_bytes`` bounds the device bytes one drain wave may
+    stage (stores + index blocks) — the admission-control budget.
+    ``max_fused_pairs`` is the largest per-graph worklist the fused path
+    accepts (it bounds the shared segment bucket, and with it both padding
+    waste and the per-segment int32 proof); larger graphs go solo.
+    ``mesh`` (optional, multi-axis) enables sharded solo placements;
+    without it every solo runs replicated. ``shard_above_bytes`` is
+    forwarded to ``plan_execution``'s auto placement.
+    """
+
+    memory_budget_bytes: int = 1 << 30
+    max_fused_pairs: int = 1 << 14
+    max_fused_graphs: int = 32
+    fuse: bool = True
+    chunk_pairs: int = 1 << 20
+    mode: str = "fused"
+    mesh: object | None = None
+    shard_above_bytes: int = DEFAULT_SHARD_ABOVE_BYTES
+    pool_max_graphs: int = 16
+    fused_max_batches: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One queued graph: its SBF stores, worklist, and submit time."""
+
+    request_id: int
+    sbf: sbf_mod.SlicedBitmap
+    wl: sbf_mod.Worklist
+    submitted_s: float
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.wl.num_pairs)
+
+    def footprint_bytes(self, chunk_pairs: int) -> int:
+        """Device bytes this request stages: pow2-padded stores plus the
+        staged index arrays (row + col int32 lanes of one chunk bucket)."""
+        sb = self.sbf
+        w = int(sb.words_per_slice) * 4
+        store = (
+            pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1))
+            + pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1))
+        ) * w
+        lanes = min(pow2_ceil(max(self.num_pairs, 1)), max(chunk_pairs, 1))
+        return store + lanes * 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Outcome of one request after a drain.
+
+    ``status`` is ``"ok"`` or ``"rejected"`` (footprint above the whole
+    budget — ``count`` is None and ``detail`` says why). ``placement``
+    records how an ok request ran: ``"fused"`` (cross-graph batch, with
+    ``batch_size`` graphs sharing the dispatch) or the solo placement
+    resolved by ``plan_execution``. ``latency_s`` is submit-to-result.
+    """
+
+    request_id: int
+    status: str
+    count: int | None
+    placement: str | None
+    latency_s: float
+    batch_size: int = 1
+    detail: str = ""
+
+
+class TCServer:
+    """Request queue + admission control + fused dispatch (see module doc).
+
+    Not thread-safe: one server instance per serving loop. ``submit`` is
+    cheap (enqueue only); ``drain`` does the work and returns every
+    processed request's :class:`ServeResult` in completion order.
+    """
+
+    def __init__(self, config: ServeConfig | None = None):
+        self.config = config or ServeConfig()
+        self.pool = ExecutorPool(max_graphs=self.config.pool_max_graphs)
+        self.multi = MultiGraphExecutor(
+            max_batches=self.config.fused_max_batches,
+            max_fused_pairs=self.config.max_fused_pairs,
+        )
+        self._queue: collections.deque[ServeRequest] = collections.deque()
+        self._next_id = 0
+        self.stats: dict = collections.Counter()
+
+    # ------------------------------------------------------------- intake
+
+    def submit(
+        self, sbf: sbf_mod.SlicedBitmap, wl: sbf_mod.Worklist
+    ) -> int:
+        """Enqueue one graph; returns its request id."""
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(
+            ServeRequest(rid, sbf, wl, submitted_s=time.perf_counter())
+        )
+        self.stats["submitted"] += 1
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ---------------------------------------------------------- admission
+
+    def _fuseable(self, req: ServeRequest) -> bool:
+        if not self.config.fuse:
+            return False
+        if req.num_pairs > self.config.max_fused_pairs:
+            return False
+        wps = int(req.sbf.words_per_slice)
+        # The per-segment int32 bound the fused kernel needs.
+        return pow2_ceil(max(req.num_pairs, 1)) * wps <= INT32_SAFE_WORDS
+
+    def _admit_wave(self) -> tuple[list[ServeRequest], list[ServeResult]]:
+        """FIFO-admit queued requests into one budgeted wave.
+
+        Returns ``(admitted, rejected_results)``. A request whose own
+        footprint exceeds the entire budget can never run and is rejected;
+        one over the wave's *remaining* budget stays queued for the next
+        wave (head-of-line — admission stays FIFO-fair, no starvation).
+        """
+        budget = int(self.config.memory_budget_bytes)
+        admitted: list[ServeRequest] = []
+        rejected: list[ServeResult] = []
+        used = 0
+        while self._queue:
+            req = self._queue[0]
+            cost = req.footprint_bytes(self.config.chunk_pairs)
+            if cost > budget:
+                self._queue.popleft()
+                self.stats["rejected"] += 1
+                rejected.append(
+                    ServeResult(
+                        req.request_id,
+                        status="rejected",
+                        count=None,
+                        placement=None,
+                        latency_s=time.perf_counter() - req.submitted_s,
+                        detail=f"footprint {cost}B exceeds budget {budget}B",
+                    )
+                )
+                continue
+            if used + cost > budget and admitted:
+                break  # wave full; head waits for the next wave
+            self._queue.popleft()
+            admitted.append(req)
+            used += cost
+        self.stats["admitted"] += len(admitted)
+        return admitted, rejected
+
+    # ----------------------------------------------------------- dispatch
+
+    def _dispatch_fused(self, group: list[ServeRequest]) -> list:
+        """Batch one word-width group and dispatch each batch fused.
+
+        Batches are packed by each graph's pow2 pair bucket: a batch's
+        shared bucket is the max inside it, so mixing a 256-pair tenant
+        into a 16384-bucket batch would sentinel-pad it 64x. Grouping by
+        equal bucket keeps staged/computed lanes at each graph's own pow2
+        cost (the same bound the solo path pays) while still amortizing
+        one dispatch across the whole batch — and every batch trivially
+        satisfies the shared-bucket single-trace property.
+        """
+        by_bucket: dict[int, list[ServeRequest]] = collections.defaultdict(list)
+        for r in group:
+            by_bucket[pow2_ceil(max(r.num_pairs, 1))].append(r)
+        cap = max(int(self.config.max_fused_graphs), 1)
+        batches = []
+        for bucket in sorted(by_bucket, reverse=True):
+            same = by_bucket[bucket]
+            batches.extend(same[i : i + cap] for i in range(0, len(same), cap))
+        dispatched = []
+        for batch in batches:
+            fut = self.multi.count_fused_async(
+                [(r.sbf, r.wl) for r in batch]
+            )
+            self.stats["fused_batches"] += 1
+            self.stats["fused_graphs"] += len(batch)
+            dispatched.append(("fused", batch, fut))
+        return dispatched
+
+    def _dispatch_solo(self, req: ServeRequest):
+        """Placement-aware single-graph dispatch (``plan_execution``)."""
+        mesh = self.config.mesh
+        if mesh is not None:
+            grid = tuple(int(x) for x in mesh.devices.shape)
+            topo = DeviceTopology(num_devices=mesh.devices.size)
+        else:
+            grid = None
+            topo = DeviceTopology(num_devices=1)
+        plan = plan_execution(
+            req.sbf,
+            req.wl,
+            topo,
+            chunk_pairs=self.config.chunk_pairs,
+            shard_above_bytes=self.config.shard_above_bytes,
+            grid=grid if grid is not None and len(grid) == 2 else None,
+        )
+        if plan.placement == "replicated" or mesh is None:
+            fut = self.pool.count_async(
+                req.sbf,
+                req.wl,
+                mode=self.config.mode,
+                chunk_pairs=self.config.chunk_pairs,
+            )
+            placement = "replicated"
+        else:
+            from repro.distributed.tc import distributed_tc_count_async
+
+            fut = distributed_tc_count_async(
+                req.sbf, req.wl, mesh, placement=plan.placement
+            )
+            placement = plan.placement
+        self.stats[f"solo_{placement}"] += 1
+        return (placement, [req], fut)
+
+    def drain(self) -> list[ServeResult]:
+        """Serve the whole queue in budgeted waves; return every result.
+
+        Within a wave everything is dispatched before anything is read
+        back, so graph closes overlap the remaining dispatches — the same
+        async-close overlap the per-graph pool loop had, plus the fused
+        batches' dispatch amortization on top.
+        """
+        results: list[ServeResult] = []
+        while self._queue:
+            admitted, rejected = self._admit_wave()
+            results.extend(rejected)
+            if not admitted:
+                break  # everything left was rejected
+            self.stats["waves"] += 1
+            by_wps: dict[int, list[ServeRequest]] = collections.defaultdict(list)
+            solos: list[ServeRequest] = []
+            for req in admitted:
+                if self._fuseable(req):
+                    by_wps[int(req.sbf.words_per_slice)].append(req)
+                else:
+                    solos.append(req)
+            dispatched = []
+            for group in by_wps.values():
+                dispatched.extend(self._dispatch_fused(group))
+            for req in solos:
+                dispatched.append(self._dispatch_solo(req))
+            for placement, batch, fut in dispatched:
+                counts = fut.result()
+                if placement != "fused":
+                    counts = (counts,)
+                now = time.perf_counter()
+                for req, count in zip(batch, counts):
+                    results.append(
+                        ServeResult(
+                            req.request_id,
+                            status="ok",
+                            count=int(count),
+                            placement=placement,
+                            latency_s=now - req.submitted_s,
+                            batch_size=len(batch),
+                        )
+                    )
+        return results
+
+    def serve(self, jobs) -> list[ServeResult]:
+        """Submit every ``(sbf, wl)`` in ``jobs`` and drain — the one-call
+        batch API benchmarks and examples use."""
+        for sb, wl in jobs:
+            self.submit(sb, wl)
+        return self.drain()
+
+    def server_stats(self) -> dict:
+        """Admission/placement counters plus the two caches' stats."""
+        out = dict(self.stats)
+        out["pool"] = self.pool.stats()
+        out["fused"] = self.multi.stats()
+        return out

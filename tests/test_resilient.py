@@ -368,6 +368,67 @@ def test_kill_a_device_recovers(stage):
     assert out.count("OK") == 2
 
 
+def test_multi_failure_soak_cascading_losses():
+    """Soak: three cascading device losses (8 -> 4 -> 2 -> 1) in one count.
+
+    ``lose_devices=(4, 2, 1)`` shrinks the fleet at each failure; every
+    recovery must resume from the last committed cursor (replay <=
+    ``checkpoint_every``), and the final single-device attempt must land
+    the exact count. Fail steps are strictly increasing because the
+    injector fires once per step value ever — each attempt trips the next
+    one, so every attempt after the last failure runs clean.
+    """
+    out = _run(
+        """
+import tempfile
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import Executor, build_sbf, build_worklist
+from repro.graphs import build_graph, rmat
+from repro.distributed import ResilienceConfig, resilient_tc_count
+from repro.runtime import FailureInjector
+
+g = build_graph(rmat(n={n}, m={m}, seed={seed}), reorder=True)
+sbf = build_sbf(g)
+wl = build_worklist(g, sbf)
+oracle = Executor(sbf, mode='jnp').count(wl)
+devs = jax.devices()
+assert len(devs) == 8, devs
+
+EVERY = 2
+mesh = Mesh(np.asarray(devs, dtype=object).reshape(4, 2), ('rows', 'cols'))
+with tempfile.TemporaryDirectory() as d:
+    cfg = ResilienceConfig(
+        checkpoint_dir=d, checkpoint_every=EVERY,
+        injector=FailureInjector(fail_at_steps=(1, 3, 5)),
+        lose_devices=(4, 2, 1), max_failures=3)
+    total, info = resilient_tc_count(sbf, wl, mesh, cfg, chunk_pairs={chunk})
+assert total == oracle, (total, oracle)
+assert info['failures'] == 3 and info['attempts'] == 4, info
+sizes = [r['grid'][0] * r['grid'][1] for r in info['remeshes']]
+assert sizes == [4, 2, 1], sizes  # the 8 -> 4 -> 2 -> 1 cascade
+for r in info['remeshes']:
+    assert r['reason'] == 'failure', r
+    assert r['replayed'] <= EVERY, r
+assert info['grid'] == [1, 1], info['grid']
+print('OK soak', sizes, 'replayed', [r['replayed'] for r in info['remeshes']])
+""".format(chunk=CHUNK, **GRAPH)
+    )
+    assert "OK soak" in out
+
+
+def test_blast_radius_sequence_semantics(tmp_path):
+    from repro.distributed import ResilienceConfig
+
+    cfg = ResilienceConfig(tmp_path, lose_devices=(4, 2, 1))
+    # failure is 1-indexed; past the end reuses the last entry.
+    assert [cfg.blast_radius(k) for k in (1, 2, 3, 4, 9)] == [4, 2, 1, 1, 1]
+    assert ResilienceConfig(tmp_path, lose_devices=2).blast_radius(5) == 2
+    assert ResilienceConfig(tmp_path, lose_devices=()).blast_radius(1) == 0
+
+
 def test_snapshot_restores_onto_smaller_mesh_shardings():
     """The store snapshot written under a (4, 2) mesh restores through
     ``load_checkpoint(shardings=...)`` onto a (3, 2) mesh: every leaf lands

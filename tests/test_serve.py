@@ -1,0 +1,270 @@
+"""Cross-graph fused serving: fusion planner, multi-graph executor, server.
+
+The fused path's contract is bit-identical counts: fusing any mix of
+graphs into shared dispatches must return exactly what the per-graph
+``Executor`` loop returns — across every ``tcim_graphs`` config, empty and
+tiny graphs, mixed pow2 buckets, and mixed placements — while retracing
+once per batch shape and respecting the admission budget. Also pins the
+``ExecutorPool`` eviction guard: evicting an executor with an unresolved
+``CountFuture`` must never invalidate the result.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.tcim_graphs import GRAPHS
+from repro.core import Executor, build_sbf, build_worklist
+from repro.core.executor import ExecutorPool, MultiGraphExecutor
+from repro.core.plan import plan_fusion, pow2_ceil
+from repro.data.graph_pipeline import load_graph
+from repro.graphs import build_graph, rmat
+from repro.graphs.exact import triangles_intersection
+from repro.launch.tc_serve import ServeConfig, TCServer
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _job(n, m, seed, slice_bits=64):
+    g = build_graph(rmat(n, m, seed=seed))
+    sbf = build_sbf(g, slice_bits)
+    wl = build_worklist(g, sbf)
+    return g, sbf, wl
+
+
+@pytest.fixture(scope="module")
+def mixed_jobs():
+    """Heterogeneous mix spanning several pow2 pair buckets + a tiny graph."""
+    jobs, want = [], []
+    for i, (n, m) in enumerate(
+        [(16, 24), (64, 300), (100, 700), (200, 1400), (400, 2500), (64, 320)]
+    ):
+        g, sbf, wl = _job(n, m, seed=i + 1)
+        jobs.append((sbf, wl))
+        want.append(triangles_intersection(g))
+    return jobs, want
+
+
+# ---------------------------------------------------------------------------
+# Fusion planner
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fusion_layout(mixed_jobs):
+    jobs, _ = mixed_jobs
+    plan = plan_fusion(jobs)
+    assert plan.num_graphs == len(jobs)
+    assert plan.padded_graphs == pow2_ceil(len(jobs))
+    assert plan.bucket == pow2_ceil(max(wl.num_pairs for _, wl in jobs))
+    ridx = plan.row_idx.reshape(plan.padded_graphs, plan.bucket)
+    # Padded segments are all-sentinel; real segments carry offset indices.
+    for i in range(plan.num_graphs, plan.padded_graphs):
+        assert (ridx[i] == -1).all()
+    for i, (sb, wl) in enumerate(jobs):
+        n = wl.num_pairs
+        np.testing.assert_array_equal(
+            ridx[i, :n],
+            np.asarray(wl.pair_row_pos[:n]) + plan.row_offsets[i],
+        )
+        assert (ridx[i, n:] == -1).all()
+
+
+def test_plan_fusion_rejects_bad_groups(mixed_jobs):
+    jobs, _ = mixed_jobs
+    with pytest.raises(ValueError, match="at least one"):
+        plan_fusion([])
+    with pytest.raises(ValueError, match="max_bucket"):
+        plan_fusion(jobs, max_bucket=1)
+    g, sbf32, wl32 = _job(64, 300, seed=9, slice_bits=32)
+    with pytest.raises(ValueError, match="words_per_slice"):
+        plan_fusion([jobs[0], (sbf32, wl32)])
+
+
+# ---------------------------------------------------------------------------
+# MultiGraphExecutor: fused == per-graph loop, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_fused_matches_loop_and_exact(mixed_jobs):
+    jobs, want = mixed_jobs
+    multi = MultiGraphExecutor()
+    got = multi.count_fused(jobs)
+    loop = tuple(Executor(sb, mode="jnp").count(wl) for sb, wl in jobs)
+    assert got == loop == tuple(want)
+    # Re-dispatch hits the batch cache and stays bit-identical.
+    assert multi.count_fused(jobs) == got
+    assert multi.stats()["hits"] == 1
+
+
+def test_fused_handles_empty_and_tiny_graphs(mixed_jobs):
+    jobs, want = mixed_jobs
+    g_e = build_graph(np.zeros((0, 2), dtype=np.int64))
+    sbf_e = build_sbf(g_e, 64)
+    wl_e = build_worklist(g_e, sbf_e)
+    assert wl_e.num_pairs == 0
+    batch = [jobs[0], (sbf_e, wl_e), jobs[1]]
+    got = MultiGraphExecutor().count_fused(batch)
+    assert got == (want[0], 0, want[1])
+
+
+def test_fused_order_and_subset_invariance(mixed_jobs):
+    """Any permutation/subset fuses to the same per-graph counts."""
+    jobs, want = mixed_jobs
+    multi = MultiGraphExecutor()
+    perm = [3, 0, 5, 2]
+    got = multi.count_fused([jobs[i] for i in perm])
+    assert got == tuple(want[i] for i in perm)
+
+
+def test_fused_single_trace_for_shared_bucket():
+    """Batches sharing (padded_graphs, bucket) share ONE jitted trace.
+
+    The fused step is a module-level lru-cached jit shared across executor
+    instances (and earlier tests), so the regression asserts on cache-size
+    *deltas* around the counts, like the Executor retrace test.
+    """
+    mk = lambda seed: _job(200, 1200, seed=seed)[1:]
+    multi = MultiGraphExecutor()
+    a = [mk(s) for s in (1, 2, 3, 4)]
+    b = [mk(s) for s in (5, 6, 7, 8)]
+    pa, pb = multi.plan(a), multi.plan(b)
+    assert (pa.padded_graphs, pa.bucket) == (pb.padded_graphs, pb.bucket)
+    if multi.trace_count == -1:
+        pytest.skip("private jit cache-size API unavailable on this jax")
+    step = multi._step_for(pa.bucket)
+    t0 = int(step._cache_size())
+    multi.count_fused(a)
+    t1 = int(step._cache_size())
+    assert t1 - t0 <= 1  # one new batch shape -> at most one new trace
+    multi.count_fused(b)  # same shape, different content: zero new traces
+    assert int(step._cache_size()) == t1
+    loop = tuple(Executor(sb, mode="jnp").count(wl) for sb, wl in b)
+    assert multi.count_fused(b) == loop
+    # A second executor reuses the shared trace outright.
+    assert MultiGraphExecutor().count_fused(a) is not None
+    assert int(step._cache_size()) == t1
+
+
+@pytest.mark.parametrize("name", list(GRAPHS))
+def test_server_matches_loop_on_bench_configs(name):
+    """Every tcim_graphs config served fused == per-graph loop == exact."""
+    cfg = GRAPHS[name].scaled(0.02)
+    g, sbf, wl = load_graph(cfg, 64)
+    want = triangles_intersection(g)
+    srv = TCServer(ServeConfig(max_fused_pairs=1 << 18))
+    (res,) = srv.serve([(sbf, wl)])
+    assert res.status == "ok" and res.count == want, name
+
+
+# ---------------------------------------------------------------------------
+# TCServer: placements, admission, rejection
+# ---------------------------------------------------------------------------
+
+
+def test_server_mixed_placements(mixed_jobs):
+    """Graphs over the fusion bound go solo; everything stays exact."""
+    jobs, want = mixed_jobs
+    cut = sorted(wl.num_pairs for _, wl in jobs)[len(jobs) // 2]
+    srv = TCServer(ServeConfig(max_fused_pairs=cut))
+    results = {r.request_id: r for r in srv.serve(jobs)}
+    placements = {r.placement for r in results.values()}
+    assert placements == {"fused", "replicated"}
+    for rid, (sb, wl) in enumerate(jobs):
+        assert results[rid].count == want[rid], rid
+        expect = "fused" if wl.num_pairs <= cut else "replicated"
+        assert results[rid].placement == expect, rid
+
+
+def test_server_admission_waves_and_rejection(mixed_jobs):
+    jobs, want = mixed_jobs
+    foot = sorted(
+        pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1)) * 8
+        + pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1)) * 8
+        + pow2_ceil(max(wl.num_pairs, 1)) * 8
+        for sb, wl in jobs
+    )
+    budget = foot[-2]  # biggest graph can never fit; the rest wave through
+    srv = TCServer(ServeConfig(memory_budget_bytes=budget))
+    results = {r.request_id: r for r in srv.serve(jobs)}
+    assert len(results) == len(jobs)  # nothing silently dropped
+    rejected = [r for r in results.values() if r.status == "rejected"]
+    assert len(rejected) >= 1
+    assert all("exceeds budget" in r.detail for r in rejected)
+    for rid, r in results.items():
+        if r.status == "ok":
+            assert r.count == want[rid]
+    assert srv.stats["waves"] >= 2  # the budget forced multiple waves
+    assert srv.stats["rejected"] == len(rejected)
+    assert srv.pending == 0
+
+
+def test_server_fuse_off_still_exact(mixed_jobs):
+    jobs, want = mixed_jobs
+    srv = TCServer(ServeConfig(fuse=False))
+    results = {r.request_id: r for r in srv.serve(jobs)}
+    assert all(r.placement == "replicated" for r in results.values())
+    assert [results[i].count for i in range(len(jobs))] == want
+
+
+def test_server_sharded_solo_placement():
+    """With a mesh and a tiny shard threshold, solo requests go sharded —
+    counts still exact (subprocess: 4 forced host devices)."""
+    code = """
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core import Executor, build_sbf, build_worklist
+from repro.graphs import build_graph, rmat
+from repro.launch.tc_serve import ServeConfig, TCServer
+
+g = build_graph(rmat(400, 2500, seed=1))
+sbf = build_sbf(g, 64)
+wl = build_worklist(g, sbf)
+want = Executor(sbf, mode='jnp').count(wl)
+mesh = Mesh(np.asarray(jax.devices(), dtype=object).reshape(2, 2),
+            ('rows', 'cols'))
+srv = TCServer(ServeConfig(fuse=False, mesh=mesh, shard_above_bytes=1))
+(res,) = srv.serve([(sbf, wl)])
+assert res.status == 'ok' and res.count == want, (res.count, want)
+assert res.placement.startswith('sharded'), res.placement
+print('OK', res.placement)
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK sharded" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# ExecutorPool eviction vs in-flight futures (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_eviction_defers_while_future_in_flight():
+    """Evicting an executor with a pending CountFuture must not invalidate
+    the result: the pool defers the eviction until the future resolves."""
+    _, sbf_a, wl_a = _job(200, 1200, seed=1)
+    _, sbf_b, wl_b = _job(200, 1200, seed=2)
+    want_a = Executor(sbf_a, mode="jnp").count(wl_a)
+    want_b = Executor(sbf_b, mode="jnp").count(wl_b)
+    pool = ExecutorPool(max_graphs=1)
+    fut_a = pool.count_async(sbf_a, wl_a)
+    assert not fut_a.resolved
+    # B's admission would evict A (capacity 1), but A has work in flight:
+    # the pool transiently holds both rather than freeing A's stores.
+    fut_b = pool.count_async(sbf_b, wl_b)
+    assert len(pool._entries) == 2
+    assert fut_a.result() == want_a  # the deferred eviction kept A valid
+    assert fut_b.result() == want_b
+    # With both futures resolved the next admission evicts down to bound.
+    _, sbf_c, wl_c = _job(200, 1200, seed=3)
+    assert pool.count(sbf_c, wl_c) == Executor(sbf_c, mode="jnp").count(wl_c)
+    assert len(pool._entries) == 1

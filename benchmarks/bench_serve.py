@@ -175,7 +175,12 @@ def run(num_graphs: int = NUM_GRAPHS, rounds: int = ROUNDS):
 
 
 if __name__ == "__main__":
+    from benchmarks.common import emit_bench_json
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_ci.json"
     rows, failures = run()
+    emit_bench_json(out, "serve", rows,
+                    gates={"serve_gate_ratio": SERVE_GATE_RATIO})
     r = rows[0]
     print(
         f"  [{'FAIL' if failures else 'ok'}] serve {r['mix']}: "
@@ -186,4 +191,5 @@ if __name__ == "__main__":
         f"counts {'match' if r['counts_ok'] else 'MISMATCH'} "
         f"rejects={r['admission']['rejected']}"
     )
+    print(f"wrote {out}: {len(rows)} serve rows")
     sys.exit(1 if failures else 0)

@@ -46,6 +46,14 @@ Gates:
     shrink-remesh, resume from the cursor) must reproduce the exact count
     with ``steps_replayed <= checkpoint_every``; rows carry the replay
     count and recovery wall-clock for the bench trajectory.
+  * **streaming** — ``bench_streaming.run()``: exact running-count parity
+    on every fixture/batch size, and delta batches >=
+    ``bench_streaming.STREAM_GATE_SPEEDUP`` (3x) faster than a full
+    recount at the 1% batch size on the gate fixtures (edges/sec rows).
+
+All sections land in ``BENCH_ci.json`` through the shared append-safe
+writer (``benchmarks.common.emit_bench_json``), one merge + atomic
+replace per section.
 
 Plan/schedule checks are pure numpy and the build check is two small
 end-to-end counts, so the gate runs in seconds on one device.
@@ -239,12 +247,21 @@ def _build_row(name, g, wl) -> dict:
 
 
 def run(out_path: str = "BENCH_ci.json") -> int:
-    from benchmarks.common import bench_graphs
+    from benchmarks.common import bench_graphs, emit_bench_json
     from benchmarks.table5_runtime import run as table5_run
     from repro.core import DeviceTopology, plan_execution
 
     rows = table5_run(["ego-facebook"])
     assert rows and rows[0]["triangles"] > 0, rows
+    # Every section goes through the one append-safe writer (merge +
+    # atomic replace), emitted as soon as it is computed — concurrent or
+    # partial gate jobs can add their sections without clobbering these.
+    emit_bench_json(out_path, "table5", rows, gates={
+        "gate": IMBALANCE_GATE,
+        "step_gate_reduction": STEP_GATE_REDUCTION,
+        "staged_gate_reduction": STAGED_GATE_REDUCTION,
+        "recovery_overhead_gate": RECOVERY_OVERHEAD_GATE,
+    })
 
     imbalance = []
     stripe_steps = []
@@ -282,34 +299,35 @@ def run(out_path: str = "BENCH_ci.json") -> int:
                 _stripe_step_row(name, (rows_s, cols_s), fixed)
             )
 
+    emit_bench_json(out_path, "imbalance", imbalance)
+    emit_bench_json(out_path, "stripe_steps", stripe_steps)
+    emit_bench_json(out_path, "build", build_rows)
+
     recovery_rows = _recovery_rows()
+    emit_bench_json(out_path, "recovery", recovery_rows)
 
     from benchmarks.bench_serve import SERVE_GATE_RATIO
     from benchmarks.bench_serve import run as serve_run
 
     serve_rows, serve_failures = serve_run()
+    emit_bench_json(out_path, "serve", serve_rows,
+                    gates={"serve_gate_ratio": SERVE_GATE_RATIO})
 
-    payload = {
-        "gate": IMBALANCE_GATE,
-        "step_gate_reduction": STEP_GATE_REDUCTION,
-        "staged_gate_reduction": STAGED_GATE_REDUCTION,
-        "recovery_overhead_gate": RECOVERY_OVERHEAD_GATE,
-        "serve_gate_ratio": SERVE_GATE_RATIO,
-        "table5": rows,
-        "imbalance": imbalance,
-        "stripe_steps": stripe_steps,
-        "build": build_rows,
-        "recovery": recovery_rows,
-        "serve": serve_rows,
-    }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2, default=float)
+    from benchmarks.bench_streaming import STREAM_GATE_SPEEDUP
+    from benchmarks.bench_streaming import print_rows as stream_print
+    from benchmarks.bench_streaming import run as stream_run
+
+    stream_rows, stream_failures = stream_run()
+    emit_bench_json(out_path, "streaming", stream_rows,
+                    gates={"streaming_gate_speedup": STREAM_GATE_SPEEDUP})
+
     print(f"wrote {out_path}: {len(rows)} table5 rows, "
           f"{len(imbalance)} imbalance configs, "
           f"{len(stripe_steps)} stripe-step configs, "
           f"{len(build_rows)} build configs, "
           f"{len(recovery_rows)} recovery configs, "
-          f"{len(serve_rows)} serve configs")
+          f"{len(serve_rows)} serve configs, "
+          f"{len(stream_rows)} streaming configs")
 
     failures = [
         r for r in imbalance if r["imbalance_weighted"] > IMBALANCE_GATE
@@ -395,6 +413,8 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"rejects={adm['rejected']}/{adm['submitted']}"
         )
 
+    stream_print(stream_rows, stream_failures)
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
     else:
@@ -415,9 +435,13 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"serve gate FAILED for {len(serve_failures)} config(s)")
     else:
         print("serve gate passed")
+    if stream_failures:
+        print(f"streaming gate FAILED for {len(stream_failures)} config(s)")
+    else:
+        print("streaming gate passed")
     return 1 if (
         failures or step_failures or build_failures or recovery_failures
-        or serve_failures
+        or serve_failures or stream_failures
     ) else 0
 
 

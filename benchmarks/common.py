@@ -1,7 +1,10 @@
 """Shared benchmark utilities: graph loading at benchmark scale + CSV out."""
 from __future__ import annotations
 
+import json
+import os
 import sys
+import tempfile
 import time
 
 from repro.configs.tcim_graphs import GRAPHS
@@ -48,6 +51,44 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     """Required CSV row format: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()
+
+
+def emit_bench_json(path: str, section: str, rows, *, gates: dict | None = None):
+    """Merge one section's rows into a shared bench JSON, append-safely.
+
+    The ONE writer for ``BENCH_ci.json``: every emitter (``ci_gate``,
+    ``bench_serve.__main__``, ``bench_streaming``) goes through here, so a
+    job writing its section can never clobber another's rows — the file is
+    re-read, this section (plus any top-level ``gates`` constants) is
+    merged in, and the result lands via an atomic same-directory
+    ``os.replace`` (a concurrent reader sees the old or the new file,
+    never a torn write). A corrupt/partial existing file is treated as
+    empty rather than sinking the whole gate job.
+    """
+    payload: dict = {}
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if not isinstance(payload, dict):
+            payload = {}
+    except (FileNotFoundError, json.JSONDecodeError):
+        payload = {}
+    if gates:
+        payload.update(gates)
+    payload[section] = rows
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench_", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return payload
 
 
 class timer:

@@ -36,9 +36,20 @@ from repro.core.plan import (
     plan_execution,
     range_owners,
     remaining_worklist,
+    replan_fixed,
     weighted_range_bounds,
 )
-from repro.core.sbf import SlicedBitmap, Worklist, build_sbf, build_worklist, sbf_stats
+from repro.core.sbf import (
+    SBFUpdate,
+    SlicedBitmap,
+    UpdateLanes,
+    Worklist,
+    build_sbf,
+    build_worklist,
+    build_worklist_pairs,
+    sbf_stats,
+    update_sbf,
+)
 from repro.core.build import (
     DeviceBuild,
     DeviceBuildFuture,
@@ -49,6 +60,13 @@ from repro.core.build import (
     device_build_sbf,
     device_build_worklist,
     device_build_trace_counts,
+    device_delta_worklist,
+)
+from repro.core.streaming import (
+    STREAM_BACKENDS,
+    DeltaResult,
+    StreamingTCState,
+    tcim_count_delta,
 )
 from repro.core.tcim import (
     BACKENDS,
@@ -72,8 +90,12 @@ __all__ = [
     "popcount_u32",
     "SlicedBitmap",
     "Worklist",
+    "SBFUpdate",
+    "UpdateLanes",
     "build_sbf",
     "build_worklist",
+    "build_worklist_pairs",
+    "update_sbf",
     "sbf_stats",
     "CountFuture",
     "Executor",
@@ -99,6 +121,7 @@ __all__ = [
     "plan_execution",
     "range_owners",
     "remaining_worklist",
+    "replan_fixed",
     "weighted_range_bounds",
     "DeviceBuild",
     "DeviceBuildFuture",
@@ -109,6 +132,11 @@ __all__ = [
     "device_build_sbf",
     "device_build_worklist",
     "device_build_trace_counts",
+    "device_delta_worklist",
+    "STREAM_BACKENDS",
+    "DeltaResult",
+    "StreamingTCState",
+    "tcim_count_delta",
     "BACKENDS",
     "BUILDS",
     "TCFuture",

@@ -62,6 +62,7 @@ __all__ = [
     "device_build_graph",
     "device_build_sbf",
     "device_build_worklist",
+    "device_delta_worklist",
     "device_build_trace_counts",
 ]
 
@@ -449,3 +450,84 @@ def device_build_worklist(
     cand, shadow = _get_jits()["cand_total"](dg.src, dg.m_dev, sb.row_ptr)
     cand_shadow = float(np.asarray(shadow).reshape(1).view(np.float32)[0])
     return _make_worklist(dg, sb, int(cand), cand_shadow)
+
+
+def _delta_index_arrays(sb: sbf_mod.SlicedBitmap):
+    """Device int32 (row_ptr, row_idx, col_ptr, col_idx) for the delta step.
+
+    Host-built SBFs (the streaming state's resident layout) upload their
+    CSR index arrays pow2-row-bucketed, matching the executor's store
+    buckets, so the delta worklist traces are keyed by the same pow2 shapes
+    as everything else; device-built SBFs pass through as-is. The *stores*
+    never travel — only the small index arrays do.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if sb.is_device:
+        return sb.row_ptr, sb.row_slice_idx, sb.col_ptr, sb.col_slice_idx
+
+    def idx(a):
+        a = np.asarray(a, dtype=np.int32)
+        bucket = pow2_ceil(max(len(a), 1))
+        if bucket != len(a):
+            a = np.concatenate([a, np.zeros(bucket - len(a), np.int32)])
+        return jax.device_put(a)
+
+    return (
+        jax.device_put(jnp.asarray(np.asarray(sb.row_ptr, dtype=np.int32))),
+        idx(sb.row_slice_idx),
+        jax.device_put(jnp.asarray(np.asarray(sb.col_ptr, dtype=np.int32))),
+        idx(sb.col_slice_idx),
+    )
+
+
+def device_delta_worklist(
+    src: np.ndarray, dst: np.ndarray, sb: sbf_mod.SlicedBitmap
+) -> DeviceWorklist:
+    """Delta worklist: valid slice pairs for an arbitrary touched-edge subset.
+
+    The streaming analogue of ``device_build_worklist``, reusing the same
+    jitted ``worklist_step`` (searchsorted expansion, branchless binary
+    search, cumsum compaction) over *just* the touched edges of a delta
+    batch instead of the whole graph — pair positions come back in the
+    SBF's global record coordinates, bit-identical to the host
+    ``sbf.build_worklist_pairs`` on the same subset (parity-tested). Edges
+    pad to a pow2 bucket and index arrays to pow2 row buckets, so repeated
+    same-bucket delta batches add zero traces.
+    """
+    import jax
+
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    m = len(src)
+    bucket = pow2_ceil(max(m, 1))
+    if bucket != m:
+        pad = np.zeros(bucket - m, dtype=np.int32)
+        src = np.concatenate([src, pad])
+        dst = np.concatenate([dst, pad])
+    src_d, dst_d = jax.device_put(src), jax.device_put(dst)
+    row_ptr, row_idx, col_ptr, col_idx = _delta_index_arrays(sb)
+    jits = _get_jits()
+    cand, shadow = jits["cand_total"](src_d, m, row_ptr)
+    cand_shadow = float(np.asarray(shadow).reshape(1).view(np.float32)[0])
+    if cand_shadow >= _CAND_GUARD:
+        raise ValueError(
+            f"delta candidate total ~{cand_shadow:.3g} is at or past int32 "
+            "device indexing; split the batch or build on the host"
+        )
+    cb = pow2_ceil(max(int(cand), 1))
+    pe, pr, pc, npair = jits["worklist"](
+        src_d, dst_d, m, row_ptr, row_idx, col_ptr, col_idx, cb
+    )
+    num_pairs = int(npair)
+    pb = pow2_ceil(max(num_pairs, 1))
+    return DeviceWorklist(
+        pair_edge=jits["prefix"](pe, pb),
+        pair_row_pos=jits["prefix"](pr, pb),
+        pair_col_pos=jits["prefix"](pc, pb),
+        num_pairs=num_pairs,
+        num_candidates=int(cand),
+        m_edges=m,
+        n_slices=sb.n_slices,
+    )

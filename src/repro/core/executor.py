@@ -97,6 +97,8 @@ __all__ = [
     "MultiGraphExecutor",
     "EXECUTOR_MODES",
     "staged_uploads",
+    "apply_store_lanes",
+    "scatter_update_trace_count",
 ]
 
 EXECUTOR_MODES = ("fused", "gather_then_kernel", "pallas_items", "jnp")
@@ -232,6 +234,66 @@ def _resident_pad_rows(a, bucket: int):
     """Zero-pad a device store's rows to ``bucket`` without a host bounce."""
     pad = ((0, bucket - a.shape[0]),) + ((0, 0),) * (a.ndim - 1)
     return jnp.pad(a, pad)
+
+
+@functools.lru_cache(maxsize=None)
+def _scatter_update_fn():
+    """Module-level jitted word-scatter into a resident slice store.
+
+    Applies ``(old | set_mask) & ~clear_mask`` at each ``(pos, word)`` cell
+    and returns a NEW array — the input store is never donated, because a
+    streaming before-count dispatched against it may still be in flight
+    (the delta protocol counts touched pairs against the pre-update stores,
+    then updates, then counts against the post-update stores). Sentinel
+    lanes carry ``pos`` beyond any store bucket, so the ``mode='drop'``
+    scatter ignores them; traces are keyed by (store shape, lane bucket) —
+    both pow2 — so steady-state streaming batches add zero traces.
+    """
+
+    def upd(store, pos, word, set_mask, clear_mask):
+        safe = jnp.minimum(pos, store.shape[0] - 1)
+        cur = store[safe, word]
+        new = (cur | set_mask) & ~clear_mask
+        return store.at[pos, word].set(new, mode="drop")
+
+    return jax.jit(upd)
+
+
+def _pad_lanes(lanes, bucket: int):
+    """Pow2-pad one side's update lanes; sentinel rows are exact no-ops."""
+    pos = np.full(bucket, _INT32_MAX, dtype=np.int32)
+    word = np.zeros(bucket, dtype=np.int32)
+    set_mask = np.zeros(bucket, dtype=np.uint32)
+    clear_mask = np.zeros(bucket, dtype=np.uint32)
+    k = lanes.num_lanes
+    pos[:k] = lanes.pos
+    word[:k] = lanes.word
+    set_mask[:k] = lanes.set_mask
+    clear_mask[:k] = lanes.clear_mask
+    return pos, word, set_mask, clear_mask
+
+
+def apply_store_lanes(store, lanes):
+    """Scatter one side's :class:`~repro.core.sbf.UpdateLanes` into a
+    device-resident store, returning the updated array (input untouched —
+    in-flight counts against the old store stay valid). Shared by the
+    replicated :class:`Executor` and the sharded executors (which remap
+    lane positions to block-local rows first)."""
+    if lanes is None or lanes.num_lanes == 0:
+        return store
+    bucket = _pow2_ceil(lanes.num_lanes)
+    padded = _pad_lanes(lanes, bucket)
+    return _scatter_update_fn()(store, *(jax.device_put(a) for a in padded))
+
+
+def scatter_update_trace_count() -> int:
+    """Jit-cache size of the store-scatter step (regression tests assert a
+    steady-state streaming batch adds zero here). -1 if the private jax
+    API disappears."""
+    try:
+        return int(_scatter_update_fn()._cache_size())
+    except Exception:
+        return -1
 
 
 @functools.lru_cache(maxsize=None)
@@ -498,6 +560,45 @@ class Executor:
     def count(self, wl) -> int:
         """Triangle contribution of a work list (Eq. 5 execute+reduce)."""
         return self.count_async(wl).result()
+
+    def update_stores(self, row_lanes, col_lanes) -> None:
+        """Scatter word-level edits (``sbf.UpdateLanes``) into the resident
+        stores — the streaming steady state: a delta batch that touches only
+        existing ``(vertex, slice)`` records edits the device stores in
+        place of a re-upload. The scatter produces NEW arrays (no donation),
+        so a before-count already dispatched against the old stores keeps
+        its buffers; lane and store shapes are pow2-bucketed, so repeated
+        same-bucket batches add zero traces (``scatter_update_trace_count``).
+        Positions must be in-bounds for the resident (pow2-padded) stores —
+        a grown SBF goes through :meth:`adopt_stores` instead.
+        """
+        for lanes, store in ((row_lanes, self.row_data), (col_lanes, self.col_data)):
+            if lanes is not None and lanes.num_lanes and int(
+                lanes.pos.max()
+            ) >= int(store.shape[0]):
+                raise ValueError(
+                    "update lane position beyond the resident store bucket "
+                    "— the SBF grew; re-adopt the stores (adopt_stores)"
+                )
+        self.row_data = apply_store_lanes(self.row_data, row_lanes)
+        self.col_data = apply_store_lanes(self.col_data, col_lanes)
+
+    def adopt_stores(self, sb: sbf_mod.SlicedBitmap) -> None:
+        """Replace the resident stores with a (grown) SBF's — one upload.
+
+        The growth path of streaming updates: merge-inserted records shift
+        positions, so scatter editing is impossible and the stores re-adopt
+        wholesale. Word width must match (the traces are keyed by it); the
+        pow2 row bucket usually survives growth, in which case every
+        existing chunk-step trace still applies.
+        """
+        if int(sb.row_slice_data.shape[1]) != self.words_per_slice:
+            raise ValueError(
+                f"adopt_stores: words_per_slice {sb.row_slice_data.shape[1]} "
+                f"!= executor's {self.words_per_slice}"
+            )
+        self.row_data = self._adopt_store(sb.row_slice_data, True)
+        self.col_data = self._adopt_store(sb.col_slice_data, True)
 
     def modeled_hbm_bytes(self, num_pairs: int, *, fused: bool | None = None) -> int:
         """Modeled execute-stage HBM traffic for this store's word width."""

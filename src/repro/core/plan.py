@@ -68,6 +68,7 @@ __all__ = [
     "FusionPlan",
     "plan_fusion",
     "plan_execution",
+    "replan_fixed",
     "remaining_worklist",
     "clamp_chunk_pairs",
     "pow2_ceil",
@@ -895,6 +896,38 @@ def plan_execution(
     )
     assert plan.total_pairs == wl.num_pairs
     return plan
+
+
+def replan_fixed(
+    plan: ExecutionPlan,
+    sb: sbf_mod.SlicedBitmap,
+    wl: sbf_mod.Worklist,
+    *,
+    chunk_pairs: int | None = None,
+) -> ExecutionPlan:
+    """Re-plan a new work list against an existing plan's resident bounds.
+
+    The streaming primitive for sharded placements: a delta batch's touched
+    pairs are a fresh (small) work list, but the sharded executor's stores
+    are already resident under ``plan``'s range bounds — so the delta plan
+    must pin those bounds (``split='fixed'``) rather than re-balance, or
+    the stripes' shard-local coordinates would not match the uploaded
+    blocks. Only ``sharded_2d`` plans carry bounds on both axes.
+    """
+    if plan.placement != "sharded_2d":
+        raise ValueError(
+            f"replan_fixed needs a sharded_2d plan, got {plan.placement!r}"
+        )
+    return plan_execution(
+        sb,
+        wl,
+        DeviceTopology(num_devices=plan.num_shards),
+        placement="sharded_2d",
+        grid=plan.grid,
+        chunk_pairs=plan.chunk_pairs if chunk_pairs is None else chunk_pairs,
+        row_bounds=plan.row_bounds,
+        col_bounds=plan.col_bounds,
+    )
 
 
 def remaining_worklist(

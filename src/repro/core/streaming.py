@@ -1,0 +1,424 @@
+"""Streaming incremental triangle counting — TCIM over an edge stream.
+
+The one-shot pipeline (core.tcim) makes TC(G) a function of resident slice
+stores; this module makes it a *running* function of an edge stream. A
+:class:`StreamingTCState` holds the current oriented edge set, the host
+``SlicedBitmap`` mirror, and a device-resident executor whose stores are
+edited in place batch after batch. Each ``apply_batch(added, removed)``
+costs O(touched pairs), not O(all pairs):
+
+    1. **Touched set.** Let ``Vr`` be the sources and ``Vc`` the
+       destinations of the batch's oriented edges. The *touched edges* are
+       the current edges with ``src in Vr`` or ``dst in Vc`` (enumerated by
+       binary search over the sorted edge-key arrays, both orientations).
+       For every untouched edge ``(i, j)``, row record-set ``R_i`` and
+       column record-set ``C_j`` are unchanged by the update (new or edited
+       records only ever belong to owners in ``Vr``/``Vc``), so its
+       popcount term is identical before and after and cancels in the
+       difference.
+    2. **Before count.** Build the delta worklist (valid slice pairs) for
+       the touched edges of the OLD edge set against the OLD stores and
+       dispatch it — asynchronously, against the executor's resident
+       device stores.
+    3. **Update.** ``core.sbf.update_sbf`` applies the batch to the host
+       mirror and emits word-level :class:`~repro.core.sbf.UpdateLanes`;
+       the executor scatters them into its resident stores
+       (``update_stores`` — a pure scatter producing NEW device arrays, so
+       the in-flight before-count keeps its buffers). Only when the batch
+       creates new ``(vertex, slice)`` records do positions shift and the
+       stores re-adopt wholesale (``grew`` — rare at streaming batch
+       sizes). Cleared slices persist as all-zero records, so removals
+       never shift positions and never grow anything.
+    4. **After count.** Delta worklist for the touched edges of the NEW
+       edge set against the NEW stores, dispatched the same way.
+    5. ``triangles += after - before`` — exact, signed, bit-identical to a
+       from-scratch count on the final edge set (property-tested; see
+       ``verify()``).
+
+Steady-state batches add **zero** jit traces: delta worklists and update
+lanes pad to pow2 buckets, the scatter and chunk steps are module-level
+cached jits, and the stores keep their pow2 row buckets across in-place
+edits (``Executor.trace_count`` / ``executor.scatter_update_trace_count``
+regression-tested).
+
+Orientation is **stable**: edges orient by raw vertex id (``src < dst``),
+never by degree, so a batch can never relabel the graph. Triangle counts
+are orientation-invariant, so parity against the (degree-reordered)
+one-shot ``tcim_count`` still holds.
+
+With a 2-axis ``mesh`` the state runs a resident
+:class:`~repro.distributed.tc.Sharded2DExecutor` instead: per batch, the
+delta worklist is re-planned against the executor's FIXED range bounds
+(``core.plan.plan_execution`` with pinned bounds — see
+``core.plan.replan_fixed``) and the update lanes are remapped to
+block-local rows (``Sharded2DExecutor.update_stores``); growth rebuilds
+the sharded executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import sbf as sbf_mod
+from repro.core.executor import Executor
+from repro.graphs.csr import build_graph
+
+__all__ = [
+    "DeltaResult",
+    "StreamingTCState",
+    "tcim_count_delta",
+    "STREAM_BACKENDS",
+]
+
+# Streaming executes through the work-list Executor modes only (the dense
+# bitgemm/mxu backends have no incremental story — no resident stores).
+STREAM_BACKENDS = ("pallas_total", "pallas_unfused", "pallas_items", "jnp")
+
+_STREAM_MODE = {
+    "pallas_total": "fused",
+    "pallas_unfused": "gather_then_kernel",
+    "pallas_items": "pallas_items",
+    "jnp": "jnp",
+}
+
+_STREAM_BUILDS = ("auto", "host", "device")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaResult:
+    """One applied batch: the new running count and what it cost."""
+
+    triangles: int  # running count AFTER this batch
+    delta: int  # signed correction this batch contributed
+    added: int
+    removed: int
+    touched_edges: int  # touched edges of the post-update edge set
+    pairs_before: int  # delta-worklist pairs counted against the old stores
+    pairs_after: int  # ... against the new stores
+    grew: bool  # batch created new (vertex, slice) records
+    timings_s: dict
+
+
+def _as_edge_array(edges) -> np.ndarray:
+    if edges is None:
+        return np.zeros((0, 2), dtype=np.int64)
+    e = np.asarray(edges, dtype=np.int64)
+    if e.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    return e.reshape(-1, 2)
+
+
+def _orient_batch(edges: np.ndarray, n: int, noun: str) -> np.ndarray:
+    """Canonicalize a batch: orient each pair by raw id, validate range."""
+    if len(edges) == 0:
+        return edges
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    if (lo == hi).any():
+        raise ValueError(f"{noun} contains a self-loop")
+    if len(lo) and (int(lo.min()) < 0 or int(hi.max()) >= n):
+        raise ValueError(
+            f"{noun} references a vertex outside [0, {n}); the vertex "
+            "universe is fixed at construction — pass n= with headroom "
+            "for streams that introduce new vertices"
+        )
+    return np.stack([lo, hi], axis=1)
+
+
+def _ranges_concat(arr: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Concatenate ``arr[lo[i]:hi[i]]`` for all i (vectorized)."""
+    cnt = (hi - lo).astype(np.int64)
+    total = int(cnt.sum())
+    if total == 0:
+        return arr[:0]
+    base = np.repeat(lo.astype(np.int64), cnt)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.concatenate([[0], np.cumsum(cnt)[:-1]]), cnt
+    )
+    return arr[base + offs]
+
+
+def _member(sorted_keys: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Boolean membership of q in a sorted unique key array."""
+    idx = np.searchsorted(sorted_keys, q)
+    found = np.zeros(len(q), dtype=bool)
+    ok = idx < len(sorted_keys)
+    found[ok] = sorted_keys[idx[ok]] == q[ok]
+    return found
+
+
+class StreamingTCState:
+    """A long-lived graph whose triangle count follows an edge stream.
+
+    ``edges`` seeds the graph (any undirected pair list; oriented and
+    deduplicated here); ``n`` fixes the vertex universe — pass headroom if
+    the stream will introduce vertices beyond the seed's max id. Then
+    ``apply_batch(added, removed)`` maintains ``triangles`` at O(touched
+    pairs) per batch (module docstring has the protocol).
+
+    ``backend`` picks the executor mode (``STREAM_BACKENDS``); ``build``
+    picks the delta-worklist front end — ``'host'`` (NumPy
+    ``build_worklist_pairs``), ``'device'`` (``core.build
+    .device_delta_worklist``: the jitted searchsorted/compaction step over
+    just the touched edges, bit-identical), or ``'auto'`` (device on
+    accelerator backends). A 2-axis ``mesh`` streams against a resident
+    ``Sharded2DExecutor`` (host build only — the planner needs host
+    arrays).
+
+    Not thread-safe; one stream mutates one executor's stores.
+    """
+
+    def __init__(
+        self,
+        edges,
+        *,
+        n: int | None = None,
+        slice_bits: int = 64,
+        backend: str = "pallas_total",
+        chunk_pairs: int = 1 << 20,
+        mesh=None,
+        schedule: str = "packed",
+        build: str = "auto",
+    ):
+        if backend not in _STREAM_MODE:
+            raise ValueError(f"backend {backend!r} not in {STREAM_BACKENDS}")
+        if build not in _STREAM_BUILDS:
+            raise ValueError(f"build {build!r} not in {_STREAM_BUILDS}")
+        if mesh is not None and build == "device":
+            raise ValueError(
+                "build='device' is single-device only — the sharded path "
+                "plans delta worklists on the host"
+            )
+        e = _as_edge_array(edges)
+        if n is None:
+            n = int(e.max()) + 1 if len(e) else 0
+        self.n = int(n)
+        self.slice_bits = int(slice_bits)
+        self.backend = backend
+        self._build = build
+        self._chunk_pairs = chunk_pairs
+        self._mesh = mesh
+        self._schedule = schedule
+        self._use_device_build = build == "device" or (
+            build == "auto" and mesh is None and jax.default_backend() != "cpu"
+        )
+        e = _orient_batch(e, self.n, "initial edges")
+        keys = np.unique(e[:, 0] * np.int64(self.n) + e[:, 1]) if len(e) else (
+            np.zeros(0, dtype=np.int64)
+        )
+        self._keys = keys  # src-major sorted unique edge keys
+        self._keys_t = np.sort(self._transpose_keys(keys))  # dst-major
+        g = build_graph(self.current_edges(), n=self.n, reorder=False)
+        self._sbf = sbf_mod.build_sbf(g, slice_bits)
+        if mesh is not None:
+            self.executor = self._make_sharded(self._sbf)
+        else:
+            self.executor = Executor(
+                self._sbf, mode=_STREAM_MODE[backend], chunk_pairs=chunk_pairs
+            )
+        # Seed count: the full worklist, once — batches never recount it.
+        self.triangles = int(self.executor.count(sbf_mod.build_worklist(g, self._sbf)))
+        self.batches = 0
+
+    # ------------------------------------------------------------ internals
+
+    def _transpose_keys(self, keys: np.ndarray) -> np.ndarray:
+        if self.n == 0:
+            return keys.copy()
+        return (keys % self.n) * np.int64(self.n) + keys // self.n
+
+    def _make_sharded(self, sb: sbf_mod.SlicedBitmap):
+        from repro.distributed.tc import Sharded2DExecutor
+
+        return Sharded2DExecutor(
+            sb,
+            self._mesh,
+            chunk_pairs=self._chunk_pairs,
+            schedule=self._schedule,
+        )
+
+    def _touched(
+        self, keys: np.ndarray, keys_t: np.ndarray, vr: np.ndarray, vc: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Edges of the keyed edge set with src in vr or dst in vc."""
+        n = np.int64(self.n)
+        by_src = _ranges_concat(
+            keys, np.searchsorted(keys, vr * n), np.searchsorted(keys, (vr + 1) * n)
+        )
+        by_dst = _ranges_concat(
+            keys_t,
+            np.searchsorted(keys_t, vc * n),
+            np.searchsorted(keys_t, (vc + 1) * n),
+        )
+        k = np.unique(np.concatenate([by_src, self._transpose_keys(by_dst)]))
+        return k // n, k % n
+
+    def _delta_worklist(self, src: np.ndarray, dst: np.ndarray, sb):
+        """Valid slice pairs for a touched-edge subset (host or device)."""
+        if self._use_device_build and len(src):
+            try:
+                return build_mod.device_delta_worklist(src, dst, sb)
+            except ValueError:
+                if self._build == "device":
+                    raise
+                # auto: int32 capacity exceeded — fall back to the host.
+        pe, pr, pc = sbf_mod.build_worklist_pairs(src, dst, sb)
+        return sbf_mod.Worklist(
+            pair_edge=pe,
+            pair_row_pos=pr,
+            pair_col_pos=pc,
+            m_edges=len(src),
+            n_slices=sb.n_slices,
+        )
+
+    def _validate(self, ka: np.ndarray, kr: np.ndarray) -> None:
+        for k, noun in ((ka, "added"), (kr, "removed")):
+            if len(np.unique(k)) != len(k):
+                raise ValueError(f"duplicate edge in {noun} batch")
+        if len(ka) and len(kr) and np.intersect1d(ka, kr).size:
+            raise ValueError("an edge appears in both added and removed")
+        if len(ka) and _member(self._keys, ka).any():
+            raise ValueError("adding an edge that is already present")
+        if len(kr) and not _member(self._keys, kr).all():
+            raise ValueError("removing an edge that is not present")
+
+    # --------------------------------------------------------------- public
+
+    @property
+    def num_edges(self) -> int:
+        return int(len(self._keys))
+
+    def current_edges(self) -> np.ndarray:
+        """The current oriented edge set, [m, 2] int64 sorted by (src, dst)."""
+        if self.n == 0 or len(self._keys) == 0:
+            return np.zeros((0, 2), dtype=np.int64)
+        n = np.int64(self.n)
+        return np.stack([self._keys // n, self._keys % n], axis=1)
+
+    def apply_batch(self, added=None, removed=None) -> DeltaResult:
+        """Apply one edge batch; returns the updated running count.
+
+        ``added``/``removed`` are undirected pair lists (any orientation;
+        canonicalized here). Set semantics are enforced: adds must be
+        absent, removes present, no edge in both, no self-loops, vertices
+        within the fixed universe. Empty batches are free no-ops.
+        """
+        t_start = time.perf_counter()
+        timings: dict[str, float] = {}
+        n = np.int64(self.n)
+        a = _orient_batch(_as_edge_array(added), self.n, "added")
+        r = _orient_batch(_as_edge_array(removed), self.n, "removed")
+        if len(a) == 0 and len(r) == 0:
+            self.batches += 1
+            return DeltaResult(
+                triangles=self.triangles, delta=0, added=0, removed=0,
+                touched_edges=0, pairs_before=0, pairs_after=0, grew=False,
+                timings_s={"total": time.perf_counter() - t_start},
+            )
+        ka = a[:, 0] * n + a[:, 1]
+        kr = r[:, 0] * n + r[:, 1]
+        self._validate(ka, kr)
+        vr = np.unique(np.concatenate([a[:, 0], r[:, 0]]))
+        vc = np.unique(np.concatenate([a[:, 1], r[:, 1]]))
+
+        # Before count: touched edges of the OLD edge set vs the OLD stores.
+        t0 = time.perf_counter()
+        src_b, dst_b = self._touched(self._keys, self._keys_t, vr, vc)
+        wl_before = self._delta_worklist(src_b, dst_b, self._sbf)
+        timings["schedule_before"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fut_before = self.executor.count_async(wl_before)
+        timings["dispatch_before"] = time.perf_counter() - t0
+
+        # Update the host mirror and scatter/adopt the resident stores. The
+        # scatter never donates, so the in-flight before-count keeps its
+        # buffers; growth re-adopts (or rebuilds the sharded executor).
+        t0 = time.perf_counter()
+        upd = sbf_mod.update_sbf(self._sbf, a, r)
+        timings["update"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        if self._mesh is not None:
+            if upd.grew:
+                self.executor = self._make_sharded(upd.sbf)
+            else:
+                self.executor.update_stores(upd.sbf, upd.row_lanes, upd.col_lanes)
+        elif upd.grew:
+            self.executor.adopt_stores(upd.sbf)
+        else:
+            self.executor.update_stores(upd.row_lanes, upd.col_lanes)
+        self._sbf = upd.sbf
+        timings["scatter"] = time.perf_counter() - t0
+
+        # Merge the sorted edge-key arrays (both orientations).
+        t0 = time.perf_counter()
+        keys = np.concatenate([self._keys, ka])
+        keys.sort(kind="stable")
+        if len(kr):
+            keys = np.delete(keys, np.searchsorted(keys, kr))
+        keys_t = np.concatenate([self._keys_t, self._transpose_keys(ka)])
+        keys_t.sort(kind="stable")
+        if len(kr):
+            keys_t = np.delete(
+                keys_t, np.searchsorted(keys_t, self._transpose_keys(kr))
+            )
+        self._keys, self._keys_t = keys, keys_t
+        timings["merge"] = time.perf_counter() - t0
+
+        # After count: touched edges of the NEW edge set vs the NEW stores
+        # (same Vr/Vc — untouched terms cancel exactly in the difference).
+        t0 = time.perf_counter()
+        src_a, dst_a = self._touched(self._keys, self._keys_t, vr, vc)
+        wl_after = self._delta_worklist(src_a, dst_a, self._sbf)
+        timings["schedule_after"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fut_after = self.executor.count_async(wl_after)
+        timings["dispatch_after"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        delta = int(fut_after.result()) - int(fut_before.result())
+        timings["close"] = time.perf_counter() - t0
+        self.triangles += delta
+        self.batches += 1
+        timings["total"] = time.perf_counter() - t_start
+        return DeltaResult(
+            triangles=self.triangles,
+            delta=delta,
+            added=int(len(a)),
+            removed=int(len(r)),
+            touched_edges=int(len(src_a)),
+            pairs_before=int(wl_before.num_pairs),
+            pairs_after=int(wl_after.num_pairs),
+            grew=bool(upd.grew),
+            timings_s=timings,
+        )
+
+    def verify(self) -> int:
+        """From-scratch oracle check: raises on any running-count drift."""
+        from repro.core.tcim import tcim_count  # deferred: tcim imports us
+
+        expect = tcim_count(
+            self.current_edges(), n=self.n, slice_bits=self.slice_bits,
+            collect_stats=False,
+        ).triangles
+        if expect != self.triangles:
+            raise AssertionError(
+                f"running count {self.triangles} != from-scratch {expect} "
+                f"after {self.batches} batches"
+            )
+        return self.triangles
+
+
+def tcim_count_delta(
+    graph_state: StreamingTCState, edges_added=None, edges_removed=None
+) -> DeltaResult:
+    """Apply one edge batch to a streaming state; returns the running count.
+
+    Functional alias for :meth:`StreamingTCState.apply_batch` — the
+    entry point named by the streaming API: build the state once, then
+    ``tcim_count_delta(state, adds, removes)`` per batch.
+    """
+    return graph_state.apply_batch(edges_added, edges_removed)

@@ -54,6 +54,11 @@ from repro.core import sbf as sbf_mod
 from repro.core.bitmat import bitpack_matrix
 from repro.core.executor import CountFuture, ExecutorPool
 from repro.core.plan import SCHEDULES, DeviceTopology, plan_execution
+from repro.core.streaming import (  # noqa: F401  (re-exported: streaming API)
+    DeltaResult,
+    StreamingTCState,
+    tcim_count_delta,
+)
 from repro.graphs.csr import Graph, build_graph
 from repro.kernels import ops
 
@@ -62,6 +67,9 @@ __all__ = [
     "TCFuture",
     "tcim_count",
     "tcim_count_graph",
+    "tcim_count_delta",
+    "StreamingTCState",
+    "DeltaResult",
     "default_executor_pool",
     "BACKENDS",
     "BUILDS",

@@ -685,6 +685,71 @@ class Sharded2DExecutor(_StripeScheduleDriver):
                 ".count, which does)"
             )
 
+    def update_stores(self, sbf: SlicedBitmap, row_lanes, col_lanes) -> None:
+        """Scatter an ``SBFUpdate``'s lanes into the resident sharded blocks.
+
+        The streaming fast path for sharded placements: lane positions are
+        *global* record coordinates (the same ones ``core.sbf.update_sbf``
+        emits), so each is remapped to its owner block's local row —
+        ``owner * shard_rows + (pos - bounds[owner])`` with the owner found
+        by binary search over the resident range bounds — and scattered via
+        the shared pow2-bucketed update jit. Only valid when the update did
+        not grow either record set (``SBFUpdate.grew`` is False): growth
+        changes record positions and hence the range bounds, so callers
+        rebuild the executor instead. ``sbf`` becomes the executor's
+        planning SBF (its host ptr/slice_idx arrays are unchanged under a
+        non-growing update, but its data must match the scattered stores).
+        """
+        from repro.core.executor import apply_store_lanes
+        from repro.core.sbf import UpdateLanes
+
+        if int(sbf.words_per_slice) != self.words_per_slice:
+            raise ValueError(
+                f"words_per_slice {sbf.words_per_slice} != resident "
+                f"{self.words_per_slice}"
+            )
+        if (
+            len(sbf.row_slice_idx) != int(self.row_bounds[-1])
+            or len(sbf.col_slice_idx) != int(self.col_bounds[-1])
+        ):
+            raise ValueError(
+                "record counts changed — the SBF grew; rebuild the "
+                "sharded executor (bounds and block layout are stale)"
+            )
+
+        def remap(lanes, bounds, shard_rows, side):
+            if lanes is None or lanes.num_lanes == 0:
+                return None
+            pos = lanes.pos.astype(np.int64)
+            if pos.max(initial=0) >= int(bounds[-1]) or pos.min(initial=0) < 0:
+                raise ValueError(
+                    f"{side} lane positions exceed the resident record "
+                    "range — the SBF grew; rebuild the sharded executor"
+                )
+            owner = np.searchsorted(bounds, pos, side="right") - 1
+            local = owner * shard_rows + (pos - bounds[owner])
+            return UpdateLanes(
+                pos=local.astype(np.int32),
+                word=lanes.word,
+                set_mask=lanes.set_mask,
+                clear_mask=lanes.clear_mask,
+            )
+
+        row_axis, col_axis = self.axis_names
+        rl = remap(row_lanes, self.row_bounds, self.row_shard_rows, "row")
+        cl = remap(col_lanes, self.col_bounds, self.col_shard_rows, "col")
+        if rl is not None:
+            self.row_store = jax.device_put(
+                apply_store_lanes(self.row_store, rl),
+                NamedSharding(self.mesh, P(row_axis, None)),
+            )
+        if cl is not None:
+            self.col_store = jax.device_put(
+                apply_store_lanes(self.col_store, cl),
+                NamedSharding(self.mesh, P(col_axis, None)),
+            )
+        self._sbf = sbf
+
     def _plan_matches_bounds(self, plan: ExecutionPlan | None) -> bool:
         return (
             plan is not None

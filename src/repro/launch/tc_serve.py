@@ -46,6 +46,15 @@ from repro.kernels.ops import INT32_SAFE_WORDS
 
 __all__ = ["ServeConfig", "ServeRequest", "ServeResult", "TCServer"]
 
+# Executor mode <-> streaming backend name (config.mode speaks Executor
+# modes; StreamingTCState speaks the user-facing backend names).
+_SERVE_BACKENDS = {
+    "pallas_total": "fused",
+    "pallas_unfused": "gather_then_kernel",
+    "pallas_items": "pallas_items",
+    "jnp": "jnp",
+}
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -135,6 +144,9 @@ class TCServer:
             max_fused_pairs=self.config.max_fused_pairs,
         )
         self._queue: collections.deque[ServeRequest] = collections.deque()
+        self._delta_queue: collections.deque = collections.deque()
+        self._streams: dict = {}
+        self._stream_bytes = 0
         self._next_id = 0
         self.stats: dict = collections.Counter()
 
@@ -154,7 +166,120 @@ class TCServer:
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._delta_queue)
+
+    # ----------------------------------------------------------- streaming
+
+    @staticmethod
+    def _stream_footprint(sb: sbf_mod.SlicedBitmap) -> int:
+        """Resident device bytes a stream's pow2-padded stores occupy."""
+        w = int(sb.words_per_slice) * 4
+        return (
+            pow2_ceil(max(int(sb.row_slice_data.shape[0]), 1))
+            + pow2_ceil(max(int(sb.col_slice_data.shape[0]), 1))
+        ) * w
+
+    def create_stream(self, edges, *, n: int | None = None,
+                      slice_bits: int = 64) -> int:
+        """Host a long-lived streaming graph; returns its stream id.
+
+        The stream's resident store footprint is charged against
+        ``memory_budget_bytes`` for as long as it lives (unlike one-shot
+        requests, whose stores are only staged for a wave), shrinking every
+        later wave's admission budget — so one server honors one memory
+        bound across both request kinds. Raises when the stream alone
+        cannot fit the remaining budget. ``close_stream`` releases it.
+        """
+        from repro.core.streaming import StreamingTCState
+
+        backend = {v: k for k, v in _SERVE_BACKENDS.items()}.get(
+            self.config.mode, "pallas_total"
+        )
+        state = StreamingTCState(
+            edges, n=n, slice_bits=slice_bits, backend=backend,
+            chunk_pairs=self.config.chunk_pairs,
+        )
+        cost = self._stream_footprint(state._sbf)
+        budget = int(self.config.memory_budget_bytes) - self._stream_bytes
+        if cost > budget:
+            raise ValueError(
+                f"stream footprint {cost}B exceeds remaining budget "
+                f"{budget}B ({len(self._streams)} streams resident)"
+            )
+        sid = self._next_id
+        self._next_id += 1
+        self._streams[sid] = state
+        self._stream_bytes += cost
+        self.stats["streams"] += 1
+        return sid
+
+    def close_stream(self, stream_id: int) -> int:
+        """Evict a stream, releasing its budget; returns its final count."""
+        state = self._streams.pop(stream_id)
+        self._stream_bytes -= self._stream_footprint(state._sbf)
+        return int(state.triangles)
+
+    def stream_count(self, stream_id: int) -> int:
+        """The stream's current running triangle count (no dispatch)."""
+        return int(self._streams[stream_id].triangles)
+
+    def submit_delta(self, stream_id: int, added=None, removed=None) -> int:
+        """Enqueue one edge batch against a hosted stream; returns its
+        request id. Processed FIFO at the next ``drain()``; the result's
+        ``count`` is the stream's running total after the batch."""
+        if stream_id not in self._streams:
+            raise ValueError(f"unknown stream id {stream_id}")
+        rid = self._next_id
+        self._next_id += 1
+        self._delta_queue.append(
+            (rid, stream_id, added, removed, time.perf_counter())
+        )
+        self.stats["submitted"] += 1
+        return rid
+
+    def _drain_deltas(self) -> list[ServeResult]:
+        """Apply every queued delta batch in FIFO order.
+
+        Deltas run before the one-shot waves: they edit resident stores in
+        place (O(touched pairs), no admission footprint beyond the stream's
+        standing charge) and later one-shot placement decisions see the
+        post-update budget. A batch that fails validation reports
+        ``status='rejected'`` with the reason — the stream state is
+        untouched (validation precedes any mutation) and the server keeps
+        draining.
+        """
+        results: list[ServeResult] = []
+        while self._delta_queue:
+            rid, sid, added, removed, t0 = self._delta_queue.popleft()
+            state = self._streams.get(sid)
+            if state is None:
+                results.append(ServeResult(
+                    rid, status="rejected", count=None, placement="streaming",
+                    latency_s=time.perf_counter() - t0,
+                    detail=f"stream {sid} was closed",
+                ))
+                continue
+            before = self._stream_footprint(state._sbf)
+            try:
+                res = state.apply_batch(added, removed)
+            except ValueError as e:
+                self.stats["delta_rejected"] += 1
+                results.append(ServeResult(
+                    rid, status="rejected", count=None, placement="streaming",
+                    latency_s=time.perf_counter() - t0, detail=str(e),
+                ))
+                continue
+            # Growth can bump the pow2 store bucket: keep the standing
+            # charge honest so admission budgets stay exact.
+            self._stream_bytes += self._stream_footprint(state._sbf) - before
+            self.stats["deltas"] += 1
+            results.append(ServeResult(
+                rid, status="ok", count=int(res.triangles),
+                placement="streaming",
+                latency_s=time.perf_counter() - t0,
+                detail=f"stream {sid} delta {res.delta:+d}",
+            ))
+        return results
 
     # ---------------------------------------------------------- admission
 
@@ -175,7 +300,8 @@ class TCServer:
         one over the wave's *remaining* budget stays queued for the next
         wave (head-of-line — admission stays FIFO-fair, no starvation).
         """
-        budget = int(self.config.memory_budget_bytes)
+        # Resident streams hold their standing charge across waves.
+        budget = int(self.config.memory_budget_bytes) - self._stream_bytes
         admitted: list[ServeRequest] = []
         rejected: list[ServeResult] = []
         used = 0
@@ -278,7 +404,7 @@ class TCServer:
         async-close overlap the per-graph pool loop had, plus the fused
         batches' dispatch amortization on top.
         """
-        results: list[ServeResult] = []
+        results: list[ServeResult] = self._drain_deltas()
         while self._queue:
             admitted, rejected = self._admit_wave()
             results.extend(rejected)
@@ -327,4 +453,6 @@ class TCServer:
         out = dict(self.stats)
         out["pool"] = self.pool.stats()
         out["fused"] = self.multi.stats()
+        out["streams_resident"] = len(self._streams)
+        out["stream_bytes"] = int(self._stream_bytes)
         return out

@@ -46,6 +46,10 @@ Gates:
     shrink-remesh, resume from the cursor) must reproduce the exact count
     with ``steps_replayed <= checkpoint_every``; rows carry the replay
     count and recovery wall-clock for the bench trajectory.
+  * **lint** — tclint over ``src/`` against ``tools/tclint/baseline.json``
+    (kept empty): zero non-baseline invariant violations; stale baseline
+    entries are reported as shrinkage so fixes retire their
+    grandfathering in the same PR. Rows land in the ``lint`` section.
   * **streaming** — ``bench_streaming.run()``: exact running-count parity
     on every fixture/batch size, and delta batches >=
     ``bench_streaming.STREAM_GATE_SPEEDUP`` (3x) faster than a full
@@ -246,6 +250,35 @@ def _build_row(name, g, wl) -> dict:
     }
 
 
+def _lint_result():
+    """tclint over src/ against the repo baseline (pure-AST, sub-second)."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo_root not in sys.path:
+        sys.path.insert(0, repo_root)
+    from tools.tclint import load_baseline, run_lint
+
+    baseline = load_baseline(
+        os.path.join(repo_root, "tools", "tclint", "baseline.json")
+    )
+    result = run_lint(["src"], root=repo_root, baseline=baseline)
+    rows = [
+        {"rule": rule, "violations": count}
+        for rule, count in result.counts.items()
+    ]
+    rows.append(
+        {
+            "rule": "total",
+            "violations": len(result.violations),
+            "baseline": len(baseline),
+            "baselined_hits": len(result.baselined),
+            "stale_baseline": len(result.stale_baseline),
+            "suppressed_pragmas": result.suppressed,
+            "files_scanned": result.files_scanned,
+        }
+    )
+    return result, rows
+
+
 def run(out_path: str = "BENCH_ci.json") -> int:
     from benchmarks.common import bench_graphs, emit_bench_json
     from benchmarks.table5_runtime import run as table5_run
@@ -262,6 +295,9 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         "staged_gate_reduction": STAGED_GATE_REDUCTION,
         "recovery_overhead_gate": RECOVERY_OVERHEAD_GATE,
     })
+
+    lint_result, lint_rows = _lint_result()
+    emit_bench_json(out_path, "lint", lint_rows)
 
     imbalance = []
     stripe_steps = []
@@ -415,6 +451,27 @@ def run(out_path: str = "BENCH_ci.json") -> int:
 
     stream_print(stream_rows, stream_failures)
 
+    lint_failures = lint_result.violations
+    status = "FAIL" if lint_failures else "ok"
+    counts = " ".join(f"{r}={c}" for r, c in lint_result.counts.items())
+    print(
+        f"  [{status}] lint: {len(lint_failures)} non-baseline violation(s) "
+        f"({counts}) | {lint_result.suppressed} pragma-suppressed | "
+        f"{len(lint_result.baselined)} baselined"
+    )
+    for v in lint_failures:
+        print(f"      {v.path}:{v.line}: {v.rule} {v.message}")
+    if lint_result.stale_baseline:
+        # Shrinkage is not a failure, but it is actionable: the fixed
+        # violations should leave the baseline in the same PR.
+        print(
+            f"      baseline can shrink by "
+            f"{len(lint_result.stale_baseline)} stale entr"
+            f"{'y' if len(lint_result.stale_baseline) == 1 else 'ies'}:"
+        )
+        for fp in lint_result.stale_baseline:
+            print(f"        {fp}")
+
     if failures:
         print(f"imbalance gate FAILED for {len(failures)} config(s)")
     else:
@@ -439,9 +496,14 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"streaming gate FAILED for {len(stream_failures)} config(s)")
     else:
         print("streaming gate passed")
+    if lint_failures:
+        print(f"lint gate FAILED: {len(lint_failures)} non-baseline "
+              f"violation(s)")
+    else:
+        print("lint gate passed")
     return 1 if (
         failures or step_failures or build_failures or recovery_failures
-        or serve_failures or stream_failures
+        or serve_failures or stream_failures or lint_failures
     ) else 0
 
 

@@ -7,9 +7,6 @@ import sys
 import tempfile
 import time
 
-from repro.configs.tcim_graphs import GRAPHS
-from repro.data.graph_pipeline import load_graph
-
 # Per-graph scale factors: full-size where a single CPU core handles it in
 # seconds, reduced for the two largest (noted in the output).
 BENCH_SCALE = {
@@ -26,6 +23,11 @@ BENCH_SCALE = {
 
 
 def bench_graphs(names=None, slice_bits: int = 64):
+    # Imported here, not at module top: emit_bench_json must stay
+    # importable in stdlib-only contexts (the tclint --bench-json path).
+    from repro.configs.tcim_graphs import GRAPHS
+    from repro.data.graph_pipeline import load_graph
+
     for name, cfg in GRAPHS.items():
         if names and name not in names:
             continue

@@ -1,4 +1,3 @@
-from repro.analysis.hlo_parse import collective_bytes_from_hlo
 from repro.analysis.roofline import roofline_terms
 
-__all__ = ["collective_bytes_from_hlo", "roofline_terms"]
+__all__ = ["roofline_terms"]

@@ -11,7 +11,6 @@ from repro.distributed.constants import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
-HBM_PER_CHIP = 16e9  # v5e
 
 
 def load_records():

@@ -8,7 +8,7 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.shapes import SHAPES, Shape, all_cells, cell_status
-from repro.configs.tcim_graphs import GRAPHS, PAPER_TABLE2
+from repro.configs.tcim_graphs import GRAPHS
 from repro.models.config import ModelConfig
 
 __all__ = [
@@ -21,7 +21,6 @@ __all__ = [
     "all_cells",
     "cell_status",
     "GRAPHS",
-    "PAPER_TABLE2",
 ]
 
 _MODULES = {

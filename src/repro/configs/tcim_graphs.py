@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["GraphConfig", "GRAPHS", "PAPER_TABLE2"]
+__all__ = ["GraphConfig", "GRAPHS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,4 +60,3 @@ GRAPHS = {
     for i, (name, (gen, nv, ne, tri)) in enumerate(_PAPER.items())
 }
 
-PAPER_TABLE2 = {k: (v.paper_vertices, v.paper_edges, v.paper_triangles) for k, v in GRAPHS.items()}

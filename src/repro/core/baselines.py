@@ -4,7 +4,6 @@
                          symmetric adjacency (jnp, blocked; MXU-eligible).
 * ``intersection_tc``  — set-intersection family: the CPU baseline algorithm
                          (vectorized numpy merge; see graphs.exact).
-* ``bruteforce_tc``    — O(n^3) oracle for tests.
 """
 from __future__ import annotations
 
@@ -14,12 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import Graph
-from repro.graphs.exact import triangles_bruteforce, triangles_intersection
+from repro.graphs.exact import triangles_intersection
 
-__all__ = ["matmul_tc", "intersection_tc", "bruteforce_tc", "timed"]
+__all__ = ["matmul_tc", "intersection_tc", "timed"]
 
 
-def matmul_tc(g: Graph, block: int = 4096) -> int:
+def matmul_tc(g: Graph, block: int = 4096) -> int:  # tclint: export-ok(paper Table V matmul-family baseline, kept for comparison runs)
     """trace(A^3)/6 with blocked jnp matmuls (f32; exact for our scales).
 
     trace(A^3) = sum_ij A[i, j] * (A @ A)[i, j]; computed block-row-wise so
@@ -40,9 +39,6 @@ def intersection_tc(g: Graph) -> int:
     """The paper's CPU baseline family (oriented merge-intersection)."""
     return triangles_intersection(g)
 
-
-def bruteforce_tc(g: Graph) -> int:
-    return triangles_bruteforce(g)
 
 
 def timed(fn, *args, **kwargs):

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import sbf as sbf_mod
 from repro.core.plan import pow2_ceil
+from repro.runtime.contracts import max_transfers, no_host_sync
 from repro.graphs.csr import (
     DeviceGraph,
     Graph,
@@ -361,6 +362,7 @@ class DeviceBuildFuture:
 
             t0 = time.perf_counter()
             raw = self._raw
+            # tclint: sync-ok(the build's one sizing readback, at future close)
             sizes = np.asarray(jnp.stack([raw[3], raw[7], raw[8], raw[9]]))
             row_nvs, col_nvs, cand = (int(x) for x in sizes[:3])
             cand_shadow = float(sizes[3:].view(np.float32)[0])
@@ -383,6 +385,8 @@ def _dispatch_sbf(dg: DeviceGraph, slice_bits: int, timings: dict) -> DeviceBuil
     return DeviceBuildFuture(dg, slice_bits, raw, timings)
 
 
+@max_transfers(1)
+@no_host_sync()
 def device_build_async(
     edges: np.ndarray,
     n: int | None = None,
@@ -390,7 +394,12 @@ def device_build_async(
     slice_bits: int = 64,
     reorder: bool = True,
 ) -> DeviceBuildFuture:
-    """Dispatch the full device build (orient -> SBF) from a raw edge list."""
+    """Dispatch the full device build (orient -> SBF) from a raw edge list.
+
+    Contract (``TCIM_CONTRACTS=1``): exactly one explicit host->device
+    transfer (``device_orient``'s edge upload) and no host syncs — the
+    sizing readback happens in ``DeviceBuildFuture.result()``.
+    """
     timings: dict = {}
     t0 = time.perf_counter()
     dg = device_orient(edges, n, reorder=reorder)
@@ -409,6 +418,8 @@ def device_build(
     return device_build_async(edges, n, slice_bits=slice_bits, reorder=reorder).result()
 
 
+@max_transfers(1)
+@no_host_sync()
 def device_build_graph_async(g: Graph, slice_bits: int = 64) -> DeviceBuildFuture:
     """Device build from a prebuilt (already oriented) host ``Graph``.
 
@@ -439,6 +450,7 @@ def device_build_sbf(dg: DeviceGraph, slice_bits: int = 64) -> sbf_mod.SlicedBit
     import jax.numpy as jnp
 
     raw = fut._raw
+    # tclint: sync-ok(blocking build variant closes its sizing readback here)
     row_nvs, col_nvs = (int(x) for x in np.asarray(jnp.stack([raw[3], raw[7]])))
     return _finalize_sbf(dg, slice_bits, raw, row_nvs, col_nvs)
 

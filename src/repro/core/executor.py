@@ -88,6 +88,7 @@ from repro.core.plan import clamp_chunk_pairs, plan_fusion, pow2_ceil as _pow2_c
 from repro.kernels import ops, ref
 from repro.kernels.common import on_cpu
 from repro.kernels.tc_gather_popcount import modeled_hbm_bytes
+from repro.runtime.contracts import max_transfers, no_host_sync
 
 __all__ = [
     "CountFuture",
@@ -147,6 +148,7 @@ class CountFuture:
             try:
                 if len(totals) > 1:
                     # One stacked device->host transfer, not one per step.
+                    # tclint: sync-ok(the one host sync per count, at CountFuture close)
                     totals = np.asarray(jnp.stack(totals))
                 self._value = sum(int(t) for t in totals)  # exact: host ints
             except Exception as e:
@@ -514,6 +516,7 @@ class Executor:
             ]
         )
 
+    @no_host_sync()
     def execute_indices_async(
         self, row_idx, col_idx, *, num_real: int | None = None
     ) -> CountFuture:
@@ -526,6 +529,10 @@ class Executor:
         (``core.build``'s worklists: chunked by static slicing, zero host
         bounces). ``num_real`` tightens the int32-overflow bound for padded
         device arrays whose real (non-sentinel) pair count is known.
+
+        Contract (``TCIM_CONTRACTS=1``): the dispatch itself never syncs —
+        ``Executor.count``'s one host transfer is the ``CountFuture`` close,
+        which runs outside this region.
         """
         p = len(row_idx)
         if p == 0 or num_real == 0:
@@ -633,7 +640,9 @@ def sbf_content_key(sb: sbf_mod.SlicedBitmap) -> str:
             )
         ).encode()
     )
+    # tclint: sync-ok(content keys hash host-built SBFs; device SBFs carry a precomputed key)
     h.update(np.ascontiguousarray(sb.row_slice_data).tobytes())
+    # tclint: sync-ok(content keys hash host-built SBFs; device SBFs carry a precomputed key)
     h.update(np.ascontiguousarray(sb.col_slice_data).tobytes())
     digest = h.hexdigest()
     # Stores are treated as immutable once built; memoize the digest on the
@@ -946,6 +955,7 @@ class MultiGraphExecutor:
             jobs, max_bucket=_pow2_ceil(max(self.max_fused_pairs, 1))
         )
 
+    @no_host_sync()
     def count_fused_async(self, jobs) -> MultiCountFuture:
         """Dispatch one fused count over ``jobs`` (list of host
         ``(SlicedBitmap, Worklist)``); defer the single host readback.
@@ -953,6 +963,10 @@ class MultiGraphExecutor:
         Raises ``ValueError`` (via ``plan_fusion``) when a job exceeds the
         fused segment bound or mixes word widths — admission control filters
         those out before calling.
+
+        Contract (``TCIM_CONTRACTS=1``): the fused dispatch never syncs, and
+        a cached batch re-dispatches against its resident blocks with zero
+        staging calls.
         """
         key = tuple(
             (sbf_content_key(sb), _worklist_key(wl)) for sb, wl in jobs
@@ -961,17 +975,20 @@ class MultiGraphExecutor:
         if batch is not None:
             self.hits += 1
             self._batches.move_to_end(key)
-            return batch.count_async()
+            with max_transfers(0):
+                return batch.count_async()
         self.misses += 1
         plan = self.plan(jobs)
         row_data = _pad_rows_pow2(
             np.concatenate(
+                # tclint: sync-ok(fusion stacks host SBF stores; one upload follows)
                 [np.asarray(sb.row_slice_data) for sb, _ in jobs]
             ) if plan.row_rows else
             np.zeros((0, plan.words_per_slice), np.uint32)
         )
         col_data = _pad_rows_pow2(
             np.concatenate(
+                # tclint: sync-ok(fusion stacks host SBF stores; one upload follows)
                 [np.asarray(sb.col_slice_data) for sb, _ in jobs]
             ) if plan.col_rows else
             np.zeros((0, plan.words_per_slice), np.uint32)

@@ -62,10 +62,14 @@ import time
 import jax
 import numpy as np
 
+from contextlib import nullcontext
+
 from repro.core import build as build_mod
 from repro.core import sbf as sbf_mod
 from repro.core.executor import Executor
+from repro.core.plan import pow2_ceil
 from repro.graphs.csr import build_graph
+from repro.runtime.contracts import max_retrace
 
 __all__ = [
     "DeltaResult",
@@ -223,6 +227,10 @@ class StreamingTCState:
         # Seed count: the full worklist, once — batches never recount it.
         self.triangles = int(self.executor.count(sbf_mod.build_worklist(g, self._sbf)))
         self.batches = 0
+        # Dispatch signatures (pow2 scatter-lane / chunk buckets) this stream
+        # has already run — re-running one is "steady state" and must hit the
+        # compiled traces (max_retrace(0) under TCIM_CONTRACTS=1).
+        self._steady_sigs: set[tuple] = set()
 
     # ------------------------------------------------------------ internals
 
@@ -274,6 +282,50 @@ class StreamingTCState:
             m_edges=len(src),
             n_slices=sb.n_slices,
         )
+
+    def _store_sig(self) -> tuple:
+        """Shapes of the resident device stores the jitted step closes over.
+        They change on SBF growth (adopt_stores), so every steady-state
+        signature must include them: a pair-bucket repeat across a growth
+        event hits a cold cache legitimately."""
+        return tuple(
+            tuple(store.shape) if store is not None else ()
+            for store in (
+                getattr(self.executor, "row_data", None),
+                getattr(self.executor, "col_data", None),
+            )
+        )
+
+    def _count_sig(self, wl) -> tuple:
+        """Shape-bucket signature of a count dispatch: the full-chunk count
+        plus the pow2 bucket of the tail chunk and the current store shapes,
+        which together determine the set of compiled step shapes the
+        executor will hit."""
+        npairs = int(wl.num_pairs)
+        nfull, tail = divmod(npairs, int(self._chunk_pairs))
+        return (
+            "count",
+            type(wl).__name__,
+            nfull,
+            pow2_ceil(tail) if tail else 0,
+            self._store_sig(),
+        )
+
+    def _steady_guard(self, sig: tuple):
+        """``max_retrace(0)`` when this signature already ran on this stream.
+
+        First occurrences (growth, a new bucket) legitimately compile and
+        just register the signature; repeats are the steady state the
+        streaming path promises adds zero retraces. Sharded streams skip the
+        contract — stripe-schedule shapes depend on the per-shard pair
+        layout, which the signature does not capture.
+        """
+        if self._mesh is not None:
+            return nullcontext()
+        if sig in self._steady_sigs:
+            return max_retrace(0)
+        self._steady_sigs.add(sig)
+        return nullcontext()
 
     def _validate(self, ka: np.ndarray, kr: np.ndarray) -> None:
         for k, noun in ((ka, "added"), (kr, "removed")):
@@ -331,7 +383,8 @@ class StreamingTCState:
         wl_before = self._delta_worklist(src_b, dst_b, self._sbf)
         timings["schedule_before"] = time.perf_counter() - t0
         t0 = time.perf_counter()
-        fut_before = self.executor.count_async(wl_before)
+        with self._steady_guard(self._count_sig(wl_before)):
+            fut_before = self.executor.count_async(wl_before)
         timings["dispatch_before"] = time.perf_counter() - t0
 
         # Update the host mirror and scatter/adopt the resident stores. The
@@ -349,7 +402,12 @@ class StreamingTCState:
         elif upd.grew:
             self.executor.adopt_stores(upd.sbf)
         else:
-            self.executor.update_stores(upd.row_lanes, upd.col_lanes)
+            sig = tuple(
+                pow2_ceil(max(int(lanes.num_lanes), 1)) if lanes is not None else 0
+                for lanes in (upd.row_lanes, upd.col_lanes)
+            )
+            with self._steady_guard(("scatter",) + sig + self._store_sig()):
+                self.executor.update_stores(upd.row_lanes, upd.col_lanes)
         self._sbf = upd.sbf
         timings["scatter"] = time.perf_counter() - t0
 
@@ -375,7 +433,8 @@ class StreamingTCState:
         wl_after = self._delta_worklist(src_a, dst_a, self._sbf)
         timings["schedule_after"] = time.perf_counter() - t0
         t0 = time.perf_counter()
-        fut_after = self.executor.count_async(wl_after)
+        with self._steady_guard(self._count_sig(wl_after)):
+            fut_after = self.executor.count_async(wl_after)
         timings["dispatch_after"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -420,5 +479,9 @@ def tcim_count_delta(
     Functional alias for :meth:`StreamingTCState.apply_batch` — the
     entry point named by the streaming API: build the state once, then
     ``tcim_count_delta(state, adds, removes)`` per batch.
+
+    Contract (``TCIM_CONTRACTS=1``): steady-state batches — a scatter /
+    chunk-bucket signature the stream has dispatched before — run under
+    ``max_retrace(0)``: re-hitting a known bucket must not compile.
     """
     return graph_state.apply_batch(edges_added, edges_removed)

@@ -84,7 +84,7 @@ __all__ = [
 _DEFAULT_POOL = ExecutorPool(max_graphs=4)
 
 
-def default_executor_pool() -> ExecutorPool:
+def default_executor_pool() -> ExecutorPool:  # tclint: export-ok(user-facing accessor for pool lifetime management, documented above)
     """The module-level pool behind ``tcim_count*(pool=None)``."""
     return _DEFAULT_POOL
 

@@ -1,4 +1,4 @@
-from repro.data.tokens import SyntheticLMDataset, batch_iterator
-from repro.data.graph_pipeline import graph_batches
+from repro.data.tokens import SyntheticLMDataset
+from repro.data.graph_pipeline import load_graph
 
-__all__ = ["SyntheticLMDataset", "batch_iterator", "graph_batches"]
+__all__ = ["SyntheticLMDataset", "load_graph"]

@@ -9,7 +9,7 @@ from repro.configs.tcim_graphs import GraphConfig
 from repro.core.sbf import build_sbf, build_worklist
 from repro.graphs import GRAPH_GENERATORS, build_graph
 
-__all__ = ["load_graph", "graph_batches"]
+__all__ = ["load_graph"]
 
 _CACHE: dict = {}
 
@@ -28,8 +28,3 @@ def load_graph(cfg: GraphConfig, slice_bits: int = 64, reorder: bool = True):
     wl = build_worklist(g, sbf)
     _CACHE[key] = (g, sbf, wl)
     return _CACHE[key]
-
-
-def graph_batches(configs, scale: float = 1.0, slice_bits: int = 64):
-    for cfg in configs:
-        yield cfg, *load_graph(cfg.scaled(scale), slice_bits)

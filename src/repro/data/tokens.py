@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["SyntheticLMDataset", "batch_iterator"]
+__all__ = ["SyntheticLMDataset"]
 
 
 @dataclasses.dataclass

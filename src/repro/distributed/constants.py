@@ -7,13 +7,8 @@ replicated instead of tensor-parallel — e.g. odd vocab sizes).
 """
 DATA_AXIS_SIZE = 16
 MODEL_AXIS_SIZE = 16
-N_PODS = 2
 
 # TPU v5e per-chip hardware constants (from the brief).
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # bytes/s
 ICI_BW_PER_LINK = 50e9  # bytes/s per link
-
-
-def divisible_by_tp(dim: int) -> bool:
-    return dim % MODEL_AXIS_SIZE == 0

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed.constants import MODEL_AXIS_SIZE
 
-__all__ = ["activation_scope", "constrain", "arch_profile", "current_rules"]
+__all__ = ["activation_scope", "constrain", "arch_profile"]
 
 _STACK: list[tuple[Mesh, dict]] = []
 
@@ -109,7 +109,3 @@ def constrain(x: jax.Array, *logical_axes):
         axis = rules.get(name) if name else None
         entries.append(_shrink(mesh, axis, dim))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
-
-
-def current_rules():
-    return _STACK[-1][1] if _STACK else None

@@ -136,9 +136,11 @@ class TCCheckpoint:
         tree = {
             "row_ptr": np.asarray(sbf.row_ptr),
             "row_slice_idx": np.asarray(sbf.row_slice_idx),
+            # tclint: sync-ok(checkpoint snapshot gathers stores to host by design)
             "row_slice_data": np.asarray(sbf.row_slice_data),
             "col_ptr": np.asarray(sbf.col_ptr),
             "col_slice_idx": np.asarray(sbf.col_slice_idx),
+            # tclint: sync-ok(checkpoint snapshot gathers stores to host by design)
             "col_slice_data": np.asarray(sbf.col_slice_data),
             "wl_row_pos": np.asarray(wl.pair_row_pos),
             "wl_col_pos": np.asarray(wl.pair_col_pos),

@@ -67,6 +67,7 @@ from repro.core.plan import (
 from repro.core.sbf import SlicedBitmap, Worklist
 from repro.kernels.ops import INT32_SAFE_WORDS
 from repro.kernels.tc_gather_popcount import gather_total_reference
+from repro.runtime.contracts import no_host_sync
 from repro.runtime.fault import CountInterrupted
 
 __all__ = [
@@ -270,8 +271,15 @@ class _StripeScheduleDriver:
             double_buffer=self.double_buffer,
         )
 
+    @no_host_sync()
     def count_plan_async(self, plan: ExecutionPlan) -> CountFuture:
-        """Dispatch every scheduled psum step; defer the exact host sum."""
+        """Dispatch every scheduled psum step; defer the exact host sum.
+
+        Contract (``TCIM_CONTRACTS=1``): the step loop stages windows and
+        enqueues psum steps without ever reading a device scalar back — the
+        one host sync is the ``CountFuture`` close (or, on the resumable
+        path, its periodic cursor commits).
+        """
         self._check_plan(plan)
         sched = self.stripe_schedule(plan)
         if sched.num_steps == 0:
@@ -354,6 +362,7 @@ class _StripeScheduleDriver:
                 # dispatch than the transfers it batches. Big windows (no
                 # cadence: one commit for the whole count) still stack.
                 vals = (
+                    # tclint: sync-ok(resumable cursor commit: the periodic exact fold)
                     np.asarray(jnp.stack(pending))
                     if len(pending) > 16
                     else pending
@@ -465,6 +474,7 @@ class ShardedColsExecutor(_StripeScheduleDriver):
         per, padded = shard_col_bounds(len(sbf.col_slice_idx), self.num_shards)
         self.col_shard_rows = per
         self.col_bounds = even_range_bounds(len(sbf.col_slice_idx), self.num_shards)
+        # tclint: sync-ok(one-time shard repack at executor construction; ROADMAP: device-resident resharding)
         col = np.asarray(sbf.col_slice_data)
         if padded != col.shape[0]:
             col = np.concatenate(
@@ -475,6 +485,7 @@ class ShardedColsExecutor(_StripeScheduleDriver):
             col, NamedSharding(mesh, P(self.axis_names, None))
         )
         self.row_store = jax.device_put(
+            # tclint: sync-ok(one-time shard repack at executor construction; ROADMAP: device-resident resharding)
             np.asarray(sbf.row_slice_data), NamedSharding(mesh, P())
         )
         self._step = make_sharded_cols_step(mesh, self.axis_names)
@@ -637,6 +648,7 @@ class Sharded2DExecutor(_StripeScheduleDriver):
         row_axis, col_axis = self.axis_names
         self.row_store = jax.device_put(
             _range_block_store(
+                # tclint: sync-ok(one-time shard repack at executor construction; ROADMAP: device-resident resharding)
                 np.asarray(sbf.row_slice_data), self.row_bounds,
                 self.row_shard_rows,
             ),
@@ -644,6 +656,7 @@ class Sharded2DExecutor(_StripeScheduleDriver):
         )
         self.col_store = jax.device_put(
             _range_block_store(
+                # tclint: sync-ok(one-time shard repack at executor construction; ROADMAP: device-resident resharding)
                 np.asarray(sbf.col_slice_data), self.col_bounds,
                 self.col_shard_rows,
             ),

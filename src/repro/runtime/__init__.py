@@ -5,6 +5,13 @@ from repro.runtime.fault import (
     StragglerMonitor,
 )
 from repro.runtime.elastic import RemeshPlan, elastic_remesh_plan, tc_remesh_plan
+from repro.runtime.contracts import (
+    ContractViolation,
+    contracts_enabled,
+    max_retrace,
+    max_transfers,
+    no_host_sync,
+)
 
 __all__ = [
     "CountInterrupted",
@@ -14,4 +21,9 @@ __all__ = [
     "RemeshPlan",
     "elastic_remesh_plan",
     "tc_remesh_plan",
+    "ContractViolation",
+    "contracts_enabled",
+    "max_retrace",
+    "max_transfers",
+    "no_host_sync",
 ]

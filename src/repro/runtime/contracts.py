@@ -1,0 +1,327 @@
+"""Runtime contracts for the TCIM hot path.
+
+PRs 1-8 earned a set of invariants the whole speedup story rests on:
+
+* one host sync per count (the ``CountFuture.result()`` close),
+* a single explicit host->device transfer in the device build,
+* zero retraces on same-bucket dispatches (pow2 store/chunk/lane buckets).
+
+These invariants used to be asserted once in a test each; this module turns
+them into contracts enforced *at the call site* whenever the environment
+variable ``TCIM_CONTRACTS`` is truthy (CI sets it for the tier-1 and
+forced-8-device jobs).  With the variable unset every contract is a
+zero-overhead pass-through: the decorator form short-circuits to the wrapped
+function after one dict lookup, and the context-manager form enters/exits
+without touching jax.
+
+Three contracts are provided, each usable as a decorator or context manager:
+
+``no_host_sync``
+    The guarded region must not scalarize a device value (``int(x)`` /
+    ``float(x)`` / ``bool(x)`` / ``x.item()`` / ``x.tolist()``): the
+    blocking-readback dunders on ``ArrayImpl`` raise for the duration of the
+    region, and ``jax.transfer_guard_device_to_host("disallow")`` is entered
+    as well so bulk readbacks trip on backends where device memory is
+    distinct from host memory.  (On the CPU backend ``np.asarray`` reads
+    device buffers zero-copy through the buffer protocol, below anything the
+    Python layer can intercept — the static rule TCL001 covers that idiom.)
+    Explicit staging (``jax.device_put``) stays legal, so dispatch paths can
+    still upload chunk indices.
+
+``max_transfers(n)``
+    The guarded region may perform at most ``n`` explicit staging calls
+    (``jax.device_put`` / ``jax.make_array_from_callback``).  The staging
+    APIs are patch-counted for the duration of the region; the repo is
+    documented single-submitter (see ``launch/tc_serve.py``), so the patch
+    window is not a concurrency hazard.  (No host-to-device transfer guard
+    here: ``make_array_from_callback`` stages its shards through jax's
+    *implicit* transfer path, so a guard would veto sanctioned staging.)
+
+``max_retrace(n)``
+    The guarded region may trigger at most ``n`` XLA compilations.  Compiles
+    are counted exactly by listening to jax's per-compile log record
+    ("Compiling <name> with global shapes and types ...") on the lowering
+    logger — one record per real compile, cache hits emit nothing — which is
+    precise for the ``n == 0`` steady-state case the streaming and pool paths
+    promise.  Note sub-jits (e.g. ``convert_element_type``) count too, so
+    budgets for ``n > 0`` regions should be calibrated, not assumed.
+
+Contract breaches raise :class:`ContractViolation` (a ``RuntimeError``), with
+the original ``XlaRuntimeError`` chained when the breach came from a transfer
+guard.
+"""
+
+from __future__ import annotations
+
+import functools
+import logging
+import os
+from contextlib import ExitStack
+from typing import Callable, Optional
+
+__all__ = [
+    "ContractViolation",
+    "contracts_enabled",
+    "no_host_sync",
+    "max_transfers",
+    "max_retrace",
+]
+
+_ENV_VAR = "TCIM_CONTRACTS"
+_FALSY = ("", "0", "false", "off", "no")
+
+
+class ContractViolation(RuntimeError):
+    """A runtime contract on the TCIM hot path was breached."""
+
+
+def contracts_enabled() -> bool:
+    """True when ``TCIM_CONTRACTS`` is set to a truthy value.
+
+    Read from the environment on every call (cheap: one dict lookup) so tests
+    can flip enforcement with ``monkeypatch.setenv`` without reloading
+    modules.
+    """
+    return os.environ.get(_ENV_VAR, "").strip().lower() not in _FALSY
+
+
+def _translate_guard_error(exc: Exception, what: str) -> Exception:
+    # jax raises XlaRuntimeError for transfer-guard breaches; surface those as
+    # ContractViolation (chained) and let everything else propagate untouched.
+    if "Disallowed" in str(exc) and "transfer" in str(exc):
+        return ContractViolation(f"{what}: {exc}")
+    return exc
+
+
+class _Contract:
+    """Decorator + context-manager base with the enabled() short-circuit."""
+
+    _what = "contract"
+
+    def __call__(self, fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if not contracts_enabled():
+                return fn(*args, **kwargs)
+            with self._fresh():
+                return fn(*args, **kwargs)
+
+        wrapper.__tcim_contract__ = self  # introspectable by tests/tooling
+        return wrapper
+
+    def _fresh(self) -> "_Contract":
+        # Context-manager state must not be shared across concurrent or
+        # recursive activations of one decorated function; clone per entry.
+        return type(self)(**self._init_kwargs())
+
+    def _init_kwargs(self) -> dict:
+        return {}
+
+    def __enter__(self):
+        self._stack: Optional[ExitStack] = None
+        if not contracts_enabled():
+            return self
+        self._stack = ExitStack()
+        try:
+            self._enter(self._stack)
+        except BaseException:
+            self._stack.close()
+            raise
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self._stack is None:
+            return False
+        try:
+            self._stack.close()
+        except Exception as guard_exc:  # guard errors surfacing at exit
+            if exc is None:
+                raise _translate_guard_error(guard_exc, self._what) from None
+            return False
+        if exc is not None:
+            translated = _translate_guard_error(exc, self._what)
+            if translated is not exc:
+                raise translated from exc
+            return False
+        self._check()
+        return False
+
+    # hooks ---------------------------------------------------------------
+    def _enter(self, stack: ExitStack) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def _check(self) -> None:
+        pass
+
+
+# Blocking-readback entry points on jax's concrete array type.  These are
+# plain Python attributes on the (C++-backed) ArrayImpl class, so they can be
+# swapped for raising stubs and restored; nested regions chain save/restore
+# correctly (the inner region restores the outer region's stubs).
+_SYNC_DUNDERS = ("__int__", "__float__", "__bool__", "__index__", "item", "tolist")
+
+
+def _array_impl():
+    # Private import isolated here: if a future jax rearranges _src, the
+    # contract degrades to transfer-guard-only instead of breaking imports.
+    try:
+        from jax._src.array import ArrayImpl
+
+        return ArrayImpl
+    except Exception:  # pragma: no cover - jax layout drift
+        return None
+
+
+class no_host_sync(_Contract):
+    """Forbid device-value scalarization inside the guarded region."""
+
+    _what = "no_host_sync"
+
+    def _enter(self, stack: ExitStack) -> None:
+        import jax
+
+        stack.enter_context(jax.transfer_guard_device_to_host("disallow"))
+        impl = _array_impl()
+        if impl is None:  # pragma: no cover - jax layout drift
+            return
+        saved = {name: getattr(impl, name) for name in _SYNC_DUNDERS}
+
+        def _make_stub(name):
+            def stub(self, *args, **kwargs):
+                raise ContractViolation(
+                    f"no_host_sync: implicit host sync via jax.Array.{name} "
+                    f"inside a guarded dispatch region (route the readback "
+                    f"through the CountFuture close instead)"
+                )
+
+            return stub
+
+        for name in _SYNC_DUNDERS:
+            setattr(impl, name, _make_stub(name))
+
+        def restore():
+            for name, fn in saved.items():
+                setattr(impl, name, fn)
+
+        stack.callback(restore)
+
+
+class max_transfers(_Contract):
+    """Allow at most ``n`` explicit staging calls and zero implicit uploads."""
+
+    def __init__(self, n: int):
+        self.n = int(n)
+        self.count = 0
+        self._what = f"max_transfers({self.n})"
+
+    def _init_kwargs(self) -> dict:
+        return {"n": self.n}
+
+    def _enter(self, stack: ExitStack) -> None:
+        import jax
+
+        self.count = 0
+        orig_put = jax.device_put
+        orig_mafc = jax.make_array_from_callback
+
+        def counting_put(*args, **kwargs):
+            self.count += 1
+            return orig_put(*args, **kwargs)
+
+        def counting_mafc(*args, **kwargs):
+            self.count += 1
+            return orig_mafc(*args, **kwargs)
+
+        jax.device_put = counting_put
+        jax.make_array_from_callback = counting_mafc
+
+        def restore():
+            jax.device_put = orig_put
+            jax.make_array_from_callback = orig_mafc
+
+        stack.callback(restore)
+
+    def _check(self) -> None:
+        if self.count > self.n:
+            raise ContractViolation(
+                f"max_transfers({self.n}): {self.count} explicit staging "
+                f"calls (jax.device_put / make_array_from_callback) in the "
+                f"guarded region"
+            )
+
+
+# Process-wide compile listener, refcounted so nested/overlapping max_retrace
+# regions share one handler and the jax logger level is restored when the last
+# region exits.  jax lowers through jax._src.interpreters.pxla and emits one
+# "Compiling <name> with global shapes and types ..." DEBUG record per actual
+# XLA compile (WARNING when jax_log_compiles is on); cache hits emit nothing.
+_COMPILE_LOGGER_NAMES = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class _CompileCounter(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.total = 0
+
+    def emit(self, record: logging.LogRecord) -> None:
+        if record.getMessage().startswith("Compiling "):
+            self.total += 1
+
+
+class _CompileListener:
+    def __init__(self):
+        self.handler = _CompileCounter()
+        self._refs = 0
+        self._saved_levels: dict[str, int] = {}
+
+    def acquire(self) -> None:
+        if self._refs == 0:
+            for name in _COMPILE_LOGGER_NAMES:
+                lg = logging.getLogger(name)
+                self._saved_levels[name] = lg.level
+                lg.setLevel(logging.DEBUG)
+                lg.addHandler(self.handler)
+        self._refs += 1
+
+    def release(self) -> None:
+        self._refs -= 1
+        if self._refs == 0:
+            for name in _COMPILE_LOGGER_NAMES:
+                lg = logging.getLogger(name)
+                lg.removeHandler(self.handler)
+                lg.setLevel(self._saved_levels.pop(name, logging.NOTSET))
+
+
+_LISTENER = _CompileListener()
+
+
+class max_retrace(_Contract):
+    """Allow at most ``n`` XLA compilations inside the guarded region."""
+
+    def __init__(self, n: int = 0):
+        self.n = int(n)
+        self.compiles = 0
+        self._start = 0
+        self._what = f"max_retrace({self.n})"
+
+    def _init_kwargs(self) -> dict:
+        return {"n": self.n}
+
+    def _enter(self, stack: ExitStack) -> None:
+        _LISTENER.acquire()
+        stack.callback(_LISTENER.release)
+        self._start = _LISTENER.handler.total
+
+        def snapshot():
+            self.compiles = _LISTENER.handler.total - self._start
+
+        # Snapshot before release runs (callbacks fire LIFO).
+        stack.callback(snapshot)
+
+    def _check(self) -> None:
+        if self.compiles > self.n:
+            raise ContractViolation(
+                f"max_retrace({self.n}): {self.compiles} XLA compilations in "
+                f"the guarded region (expected a warm cache; check shape "
+                f"bucketing on the dispatched operands)"
+            )

@@ -1,0 +1,183 @@
+"""Runtime contract enforcement (src/repro/runtime/contracts.py).
+
+The contracts are env-gated (TCIM_CONTRACTS): these tests flip the variable
+per-test with monkeypatch, so they pass whether or not the surrounding CI job
+runs with enforcement on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.contracts import (
+    ContractViolation,
+    contracts_enabled,
+    max_retrace,
+    max_transfers,
+    no_host_sync,
+)
+
+
+@pytest.fixture
+def contracts_on(monkeypatch):
+    monkeypatch.setenv("TCIM_CONTRACTS", "1")
+
+
+@pytest.fixture
+def contracts_off(monkeypatch):
+    monkeypatch.setenv("TCIM_CONTRACTS", "0")
+
+
+def _sync_scalar():
+    # Deliberate implicit device->host transfer: int() on a device value.
+    return int(jnp.arange(8).sum())
+
+
+def test_enabled_flag_reads_env(monkeypatch):
+    monkeypatch.setenv("TCIM_CONTRACTS", "1")
+    assert contracts_enabled()
+    monkeypatch.setenv("TCIM_CONTRACTS", "off")
+    assert not contracts_enabled()
+    monkeypatch.delenv("TCIM_CONTRACTS")
+    assert not contracts_enabled()
+
+
+# -- no_host_sync ---------------------------------------------------------
+
+
+def test_no_host_sync_trips_on_syncing_function(contracts_on):
+    guarded = no_host_sync()(_sync_scalar)
+    with pytest.raises(ContractViolation, match="no_host_sync"):
+        guarded()
+
+
+def test_no_host_sync_context_manager_trips(contracts_on):
+    with pytest.raises(ContractViolation, match="no_host_sync"):
+        with no_host_sync():
+            _sync_scalar()
+
+
+def test_no_host_sync_allows_pure_dispatch(contracts_on):
+    @no_host_sync()
+    def dispatch(x):
+        staged = jax.device_put(np.arange(4, dtype=np.int32))  # explicit h2d ok
+        return x + staged
+
+    out = dispatch(jnp.zeros(4, jnp.int32))
+    assert int(out.sum()) == 6  # readback outside the guarded region
+
+
+def test_no_host_sync_noop_when_disabled(contracts_off):
+    assert no_host_sync()(_sync_scalar)() == 28
+    with no_host_sync():
+        assert _sync_scalar() == 28
+
+
+# -- max_transfers --------------------------------------------------------
+
+
+def test_max_transfers_trips_over_budget(contracts_on):
+    with pytest.raises(ContractViolation, match="max_transfers"):
+        with max_transfers(1):
+            jax.device_put(np.arange(4))
+            jax.device_put(np.arange(4))
+
+
+def test_max_transfers_within_budget(contracts_on):
+    with max_transfers(2) as ct:
+        jax.device_put(np.arange(4))
+        jax.make_array_from_callback(
+            (4,),
+            jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+            lambda idx: np.arange(4)[idx],
+        )
+    assert ct.count == 2
+
+
+def test_max_transfers_restores_staging_apis(contracts_on):
+    orig_put = jax.device_put
+    orig_mafc = jax.make_array_from_callback
+    with pytest.raises(ContractViolation):
+        with max_transfers(0):
+            jax.device_put(np.arange(2))
+    assert jax.device_put is orig_put
+    assert jax.make_array_from_callback is orig_mafc
+
+
+def test_max_transfers_noop_when_disabled(contracts_off):
+    with max_transfers(0):
+        jax.device_put(np.arange(4))  # over budget, but enforcement is off
+
+
+# -- max_retrace ----------------------------------------------------------
+
+
+def test_max_retrace_trips_on_bucket_violating_recount(contracts_on):
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.zeros(8, jnp.int32))  # warm the pow2-bucket trace
+    with max_retrace(0):
+        f(jnp.zeros(8, jnp.int32))  # same bucket: cache hit, no compiles
+    with pytest.raises(ContractViolation, match="max_retrace"):
+        with max_retrace(0):
+            # Bucket-violating shape: forces a fresh trace + XLA compile.
+            f(jnp.zeros(13, jnp.int32))
+
+
+def test_max_retrace_decorator_counts_compiles(contracts_on):
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    @max_retrace(0)
+    def warm_recount():
+        return g(jnp.ones(16, jnp.float32))
+
+    g(jnp.ones(16, jnp.float32))  # warm
+    warm_recount()  # zero compiles: passes
+
+    @max_retrace(0)
+    def cold_recount():
+        return g(jnp.ones(17, jnp.float32))
+
+    with pytest.raises(ContractViolation, match="max_retrace"):
+        cold_recount()
+
+
+def test_max_retrace_noop_when_disabled(contracts_off):
+    @jax.jit
+    def h(x):
+        return x - 1
+
+    with max_retrace(0):
+        h(jnp.zeros(33))  # compiles, but enforcement is off
+
+
+# -- hot paths stay contract-clean ----------------------------------------
+
+
+def test_executor_count_clean_under_contracts(contracts_on):
+    from repro.core.tcim import tcim_count
+    from repro.graphs import build_graph, rmat
+    from repro.graphs.exact import triangles_intersection
+
+    edges = rmat(128, 400, seed=3)
+    res = tcim_count(edges, n=128)
+    g = build_graph(edges, n=128, reorder=False)
+    assert res.triangles == triangles_intersection(g)
+
+
+def test_streaming_delta_clean_under_contracts(contracts_on):
+    from repro.core.streaming import StreamingTCState, tcim_count_delta
+    from repro.graphs import build_graph, rmat
+    from repro.graphs.exact import triangles_intersection
+
+    edges = rmat(64, 240, seed=5)
+    state = StreamingTCState(edges[:180], n=64)
+    for lo in (180, 195, 210, 225):
+        tcim_count_delta(state, edges_added=edges[lo : lo + 15])
+    g = build_graph(edges, n=64, reorder=False)
+    assert state.triangles == triangles_intersection(g)

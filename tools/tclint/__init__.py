@@ -1,0 +1,357 @@
+"""tclint — static enforcement of the TCIM hot-path invariants.
+
+The TCIM speedup story is "keep the data in the array and never bounce
+through the host"; PRs 1-8 encoded that as invariants (one host sync per
+count, a single upload per device build, pow2 buckets so same-bucket work
+never retraces, int32-safe pair*word*bit budgets).  tclint walks the AST of
+``src/`` and flags code that breaks them:
+
+========  ==============================================================
+rule      what it flags
+========  ==============================================================
+TCL001    implicit host sync: ``int()``/``float()``/``bool()``/
+          ``np.asarray()``/``.item()``/``.tolist()`` applied to a
+          device-tainted value inside an execute-path module
+TCL002    unsanctioned transfer: ``jax.device_put`` /
+          ``jax.make_array_from_callback`` outside the sanctioned
+          build/staging modules
+TCL003    retrace hazard: eager variable-bound slicing of a device value
+          outside a jit boundary, or a non-pow2 literal shape handed to a
+          ``jnp`` array constructor in an execute-path module
+TCL004    int32 overflow: products/shifts of pair/word/bit quantities in
+          a function with no INT32-guard reference
+TCL005    donation reuse: a buffer referenced again after being passed in
+          a ``donate_argnums`` position
+TCL006    dead export: a public ``src/repro`` name referenced nowhere
+          else in the repo
+========  ==============================================================
+
+Each rule has an escape hatch: a pragma comment on (or on the line
+immediately above) the offending statement,
+``# tclint: <kw>-ok(<reason>)`` (kw per rule: sync, transfer, retrace,
+overflow, donate, export) with a **non-empty** reason.  Pragmas are the
+preferred way to sanction a violation; the JSON baseline
+(``tools/tclint/baseline.json``) exists for bulk grandfathering and is kept
+empty — CI fails on any violation not pragma'd or baselined.
+
+Run it::
+
+    python -m tools.tclint src/ --baseline tools/tclint/baseline.json --json
+
+The engine is stdlib-only (``ast`` + ``json``): the CI lint job needs no
+jax install.  ``--bench-json`` appends a ``lint`` section to
+``BENCH_ci.json`` through ``benchmarks/common.py::emit_bench_json``
+(imported lazily, so only that flag needs the repo importable).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Sequence
+
+__all__ = [
+    "Config",
+    "Violation",
+    "LintResult",
+    "RULES",
+    "run_lint",
+    "lint_source",
+    "load_baseline",
+    "save_baseline",
+]
+
+RULES = ("TCL001", "TCL002", "TCL003", "TCL004", "TCL005", "TCL006")
+
+# pragma keyword -> rule id; "# tclint: sync-ok(reason)" suppresses TCL001
+# on that statement.
+PRAGMA_KEYWORDS = {
+    "sync": "TCL001",
+    "transfer": "TCL002",
+    "retrace": "TCL003",
+    "overflow": "TCL004",
+    "donate": "TCL005",
+    "export": "TCL006",
+}
+
+_PRAGMA_RE = re.compile(r"#\s*tclint:\s*([a-z]+)-ok\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Repo-specific rule scoping.
+
+    Module lists are path *suffixes* matched against POSIX-style relative
+    paths, so the same config works from the repo root or an absolute scan
+    (and fixture tests can point the scopes at synthetic files).
+    """
+
+    # TCL001/TCL003/TCL004 scope: the modules on the execute path, where a
+    # stray sync/retrace/overflow is a performance (or correctness) bug.
+    execute_modules: tuple[str, ...] = (
+        "repro/core/executor.py",
+        "repro/core/build.py",
+        "repro/core/streaming.py",
+        "repro/distributed/tc.py",
+        "repro/distributed/resilient.py",
+        "repro/launch/tc_serve.py",
+    )
+    # TCL002: modules allowed to call the explicit staging APIs.
+    transfer_modules: tuple[str, ...] = (
+        "repro/core/executor.py",
+        "repro/core/build.py",
+        "repro/graphs/csr.py",
+        "repro/distributed/tc.py",
+        "repro/checkpoint/store.py",
+    )
+    # Attributes that name resident device stores anywhere in the repo —
+    # the taint seeds for TCL001/TCL003 (beyond jnp./jax. call results).
+    device_attrs: tuple[str, ...] = (
+        "row_data",
+        "col_data",
+        "row_store",
+        "col_store",
+        "row_slice_data",
+        "col_slice_data",
+    )
+    # Pair/word/bit quantity identifiers whose products TCL004 audits.
+    quantity_names: tuple[str, ...] = (
+        "num_pairs",
+        "npairs",
+        "n_pairs",
+        "num_real",
+        "chunk_pairs",
+        "block_pairs",
+        "total_pairs",
+        "words_per_slice",
+        "slice_bits",
+        "n_slices",
+        "bucket",
+    )
+    # A function that references any of these is considered int32-guarded.
+    guard_names: tuple[str, ...] = (
+        "INT32_SAFE_WORDS",
+        "_INT32_MAX",
+        "INT32_MAX",
+        "clamp_chunk_pairs",
+        "iinfo",
+        "_CAND_GUARD",
+    )
+    # TCL006 scans public names defined under this root ...
+    export_root: str = "src/repro"
+    # ... against identifier usage across these trees.
+    usage_roots: tuple[str, ...] = (
+        "src",
+        "tests",
+        "benchmarks",
+        "examples",
+        "tools",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str  # repo-relative POSIX path
+    line: int
+    col: int
+    scope: str  # enclosing qualname ("<module>" at top level)
+    message: str
+    snippet: str  # normalized source of the offending node
+    end_line: int = 0  # pragma search span; 0 means == line
+
+    @property
+    def span(self) -> range:
+        """Lines a suppressing pragma may sit on: any line of the offending
+        statement, or the line immediately above it (comment-above style)."""
+        return range(self.line - 1, max(self.end_line, self.line) + 1)
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable id for baselining: no line numbers, so unrelated edits
+        above a violation do not churn the baseline."""
+        h = hashlib.sha1(
+            "\x1f".join((self.rule, self.path, self.scope, self.snippet)).encode()
+        ).hexdigest()[:12]
+        return f"{self.rule}:{self.path}:{self.scope}:{h}"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("end_line")
+        d["fingerprint"] = self.fingerprint
+        return d
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: list[Violation]  # not suppressed, not baselined
+    baselined: list[Violation]  # matched a baseline entry
+    suppressed: int  # pragma'd count
+    stale_baseline: list[str]  # baseline entries that no longer fire
+    files_scanned: int
+
+    @property
+    def counts(self) -> dict[str, int]:
+        out = {rule: 0 for rule in RULES}
+        for v in self.violations:
+            out[v.rule] += 1
+        return out
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "files_scanned": self.files_scanned,
+            "counts": self.counts,
+            "suppressed_pragmas": self.suppressed,
+            "baselined": len(self.baselined),
+            "stale_baseline": self.stale_baseline,
+            "violations": [v.to_json() for v in self.violations],
+        }
+
+
+def parse_pragmas(source: str) -> dict[int, set[str]]:
+    """line number -> rules suppressed there.  Pragmas with an empty reason
+    are ignored — the reason is the documentation the escape hatch exists
+    for."""
+    out: dict[int, set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        for kw, reason in _PRAGMA_RE.findall(line):
+            rule = PRAGMA_KEYWORDS.get(kw)
+            if rule is not None and reason.strip():
+                out.setdefault(lineno, set()).add(rule)
+    return out
+
+
+def snippet_of(source: str, node: ast.AST) -> str:
+    """Whitespace-normalized source of ``node`` (fingerprint stability)."""
+    try:
+        seg = ast.get_source_segment(source, node)
+    except Exception:
+        seg = None
+    if seg is None:
+        seg = ast.dump(node)
+    return " ".join(seg.split())[:200]
+
+
+def _split(
+    raw: Iterable[Violation], pragmas: dict[int, set[str]]
+) -> tuple[list[Violation], int]:
+    kept, suppressed = [], 0
+    for v in raw:
+        if any(v.rule in pragmas.get(ln, ()) for ln in v.span):
+            suppressed += 1
+        else:
+            kept.append(v)
+    return kept, suppressed
+
+
+def lint_source(
+    source: str, path: str, config: Config | None = None
+) -> tuple[list[Violation], int]:
+    """Run the per-file rules (TCL001-TCL005) over one module's source.
+
+    Returns ``(violations, pragma_suppressed_count)``.  ``path`` scopes the
+    rules (execute-path vs staging module).  TCL006 is cross-module and
+    lives in :func:`tools.tclint.deadcode.find_dead_exports`.
+    """
+    from tools.tclint import rules as rules_mod
+
+    config = config or Config()
+    tree = ast.parse(source, filename=path)
+    raw: list[Violation] = []
+    raw += rules_mod.check_host_sync(tree, path, source, config)
+    raw += rules_mod.check_transfers(tree, path, source, config)
+    raw += rules_mod.check_retrace_hazards(tree, path, source, config)
+    raw += rules_mod.check_int32_products(tree, path, source, config)
+    raw += rules_mod.check_donation_reuse(tree, path, source, config)
+    deduped: dict[tuple, Violation] = {}
+    for v in raw:
+        deduped.setdefault((v.rule, v.line, v.col, v.message), v)
+    return _split(deduped.values(), parse_pragmas(source))
+
+
+def _collect_files(paths: Sequence[str], root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    return [f for f in files if "__pycache__" not in f.parts]
+
+
+def _relpath(f: Path, root: Path) -> str:
+    f = f.resolve()
+    try:
+        return f.relative_to(root).as_posix()
+    except ValueError:
+        return f.as_posix()
+
+
+def run_lint(
+    paths: Sequence[str],
+    *,
+    root: str | Path = ".",
+    config: Config | None = None,
+    baseline: set[str] | None = None,
+    dead_exports: bool = True,
+) -> LintResult:
+    """Lint ``paths`` (files or directories, relative to ``root``)."""
+    config = config or Config()
+    rootp = Path(root).resolve()
+    files = _collect_files(paths, rootp)
+    violations: list[Violation] = []
+    suppressed = 0
+    for f in files:
+        kept, supp = lint_source(f.read_text(), _relpath(f, rootp), config)
+        violations.extend(kept)
+        suppressed += supp
+    if dead_exports:
+        from tools.tclint.deadcode import find_dead_exports
+
+        dead, dead_suppressed = find_dead_exports(rootp, config)
+        violations.extend(dead)
+        suppressed += dead_suppressed
+    baseline = baseline or set()
+    kept, grandfathered = [], []
+    fired = set()
+    for v in violations:
+        fp = v.fingerprint
+        if fp in baseline:
+            fired.add(fp)
+            grandfathered.append(v)
+        else:
+            kept.append(v)
+    kept.sort(key=lambda v: (v.path, v.line, v.rule))
+    return LintResult(
+        violations=kept,
+        baselined=grandfathered,
+        suppressed=suppressed,
+        stale_baseline=sorted(baseline - fired),
+        files_scanned=len(files),
+    )
+
+
+def load_baseline(path: str | Path) -> set[str]:
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return set(data.get("entries", []))
+
+
+def save_baseline(path: str | Path, entries: Iterable[str]) -> None:
+    Path(path).write_text(
+        json.dumps({"version": 1, "entries": sorted(entries)}, indent=2) + "\n"
+    )

@@ -1,0 +1,125 @@
+"""CLI: ``python -m tools.tclint src/ --baseline tools/tclint/baseline.json``.
+
+Exit status 1 when any violation is neither pragma'd nor baselined (or when
+the baseline has gone stale and --prune-stale is not set, stale entries are
+reported but do not fail the run — shrink the baseline in the same PR).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.tclint import (
+    RULES,
+    Config,
+    load_baseline,
+    run_lint,
+    save_baseline,
+)
+
+
+def _emit_bench_section(result, bench_path: str, baseline: set[str]) -> None:
+    # Lazy import: benchmarks.common needs the repo on sys.path; the plain
+    # lint run stays stdlib-only.
+    from benchmarks.common import emit_bench_json
+
+    rows = [
+        {
+            "rule": rule,
+            "violations": count,
+            "baseline": sum(1 for e in baseline if e.startswith(rule)),
+        }
+        for rule, count in result.counts.items()
+    ]
+    rows.append(
+        {
+            "rule": "total",
+            "violations": len(result.violations),
+            "baseline": len(baseline),
+            "baselined_hits": len(result.baselined),
+            "stale_baseline": len(result.stale_baseline),
+            "suppressed_pragmas": result.suppressed,
+            "files_scanned": result.files_scanned,
+        }
+    )
+    emit_bench_json(bench_path, "lint", rows)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tclint", description="TCIM hot-path invariant linter"
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--baseline", help="JSON baseline of grandfathered findings")
+    ap.add_argument(
+        "--json", action="store_true", help="emit the full report as JSON"
+    )
+    ap.add_argument(
+        "--bench-json",
+        metavar="PATH",
+        help="append a 'lint' section to this BENCH_ci.json",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        metavar="PATH",
+        help="write current violations as the new baseline and exit 0",
+    )
+    ap.add_argument(
+        "--no-dead-exports",
+        action="store_true",
+        help="skip the cross-module TCL006 scan (per-file rules only)",
+    )
+    ap.add_argument(
+        "--root", default=".", help="repo root for relative paths (default: cwd)"
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline) if args.baseline else set()
+    result = run_lint(
+        args.paths,
+        root=args.root,
+        config=Config(),
+        baseline=baseline,
+        dead_exports=not args.no_dead_exports,
+    )
+
+    if args.write_baseline:
+        save_baseline(
+            args.write_baseline,
+            [v.fingerprint for v in result.violations]
+            + [v.fingerprint for v in result.baselined],
+        )
+        print(f"wrote {len(result.violations) + len(result.baselined)} entries "
+              f"to {args.write_baseline}")
+        return 0
+
+    if args.bench_json:
+        _emit_bench_section(result, args.bench_json, baseline)
+
+    if args.json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        for v in result.violations:
+            print(f"{v.path}:{v.line}:{v.col}: {v.rule} [{v.scope}] {v.message}")
+            print(f"    {v.snippet}")
+            print(f"    fingerprint: {v.fingerprint}")
+        counts = " ".join(f"{r}={c}" for r, c in result.counts.items())
+        print(
+            f"tclint: {len(result.violations)} violation(s) "
+            f"({counts}) | {result.suppressed} pragma-suppressed | "
+            f"{len(result.baselined)} baselined | "
+            f"{len(result.stale_baseline)} stale baseline entr"
+            f"{'y' if len(result.stale_baseline) == 1 else 'ies'} | "
+            f"{result.files_scanned} files"
+        )
+        for fp in result.stale_baseline:
+            print(f"  stale baseline entry (no longer fires): {fp}")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(Path(__file__).resolve().parents[2]))
+    raise SystemExit(main())

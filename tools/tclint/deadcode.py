@@ -1,0 +1,242 @@
+"""TCL006 — dead exports: public ``src/repro`` names reachable from nowhere.
+
+A name is *public* if it is a top-level function/class/assignment in a
+module under ``Config.export_root`` and either listed in that module's
+``__all__`` or simply not underscore-prefixed.  Liveness is mark-and-sweep:
+
+* **External roots** — any identifier match in another file (import,
+  attribute access, bare name, or a string constant equal to the name —
+  registry-by-string lookups such as ``SCHEDULES["packed"]`` resolve through
+  strings).  A package ``__init__`` that merely re-exports the name does
+  *not* count; an ``__init__`` that calls/extends it does.
+* **Loose-statement roots** — identifiers referenced by module-level
+  statements other than defs and imports (registration calls, ``__all__``
+  excluded): those run on import, so whatever they touch is live.
+* **Propagation** — a definition referenced from a *live* definition in the
+  same module is live.  This keeps result/carrier dataclasses (``TCResult``
+  constructed by ``tcim_count``) alive without a pragma while still flagging
+  whole dead clusters (a helper only its dead sibling calls dies with it).
+
+The external match is deliberately conservative (any textual identifier
+match counts), so a flagged name is *really* dead — which keeps the
+delete-what-it-flags policy safe.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from tools.tclint import Config, Violation, parse_pragmas
+
+_DUNDER = ("__all__",)
+_WORD_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _explicit_all(tree: ast.Module) -> set[str] | None:
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "__all__"
+            and isinstance(node.value, (ast.List, ast.Tuple))
+        ):
+            return {
+                e.value
+                for e in node.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            }
+    return None
+
+
+def _binds_of(node: ast.stmt) -> list[str]:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return [node.name]
+    if isinstance(node, ast.Assign):
+        return [
+            t.id
+            for tgt in node.targets
+            for t in ast.walk(tgt)
+            if isinstance(t, ast.Name)
+        ]
+    if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+        return [node.target.id]
+    return []
+
+
+def _refs_of(node: ast.AST) -> set[str]:
+    """Name/attribute identifiers a definition's subtree references."""
+    return {
+        n.id if isinstance(n, ast.Name) else n.attr
+        for n in ast.walk(node)
+        if isinstance(n, (ast.Name, ast.Attribute))
+    }
+
+
+def _module_graph(
+    tree: ast.Module,
+) -> tuple[dict[str, ast.stmt], dict[str, set[str]], set[str]]:
+    """(all top-level defs, per-def reference sets, loose-statement refs)."""
+    defs: dict[str, ast.stmt] = {}
+    refs: dict[str, set[str]] = {}
+    loose: set[str] = set()
+    for node in tree.body:
+        names = [n for n in _binds_of(node) if n not in _DUNDER]
+        if names:
+            r = _refs_of(node)
+            for name in names:
+                defs.setdefault(name, node)
+                refs.setdefault(name, set()).update(r - {name})
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        else:
+            loose |= _refs_of(node)
+    return defs, refs, loose
+
+
+def _public_defs(tree: ast.Module) -> dict[str, ast.stmt]:
+    """name -> defining statement for a module's top-level public names."""
+    explicit = _explicit_all(tree)
+    out: dict[str, ast.stmt] = {}
+    for node in tree.body:
+        for name in _binds_of(node):
+            if name in _DUNDER or name.startswith("_"):
+                continue
+            if explicit is not None and name not in explicit:
+                continue
+            out[name] = node
+    return out
+
+
+def _identifiers_used(tree: ast.Module) -> set[str]:
+    """Every identifier a module references: names, attributes, import
+    targets/aliases, and string constants (registry keys)."""
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            used.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                used.add(alias.name.split(".")[-1])
+                if alias.asname:
+                    used.add(alias.asname)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            # Tokenize: registry keys ("packed") AND embedded code —
+            # tests that exec subprocess snippets reference names inside
+            # triple-quoted strings.
+            used.update(_WORD_RE.findall(node.value))
+    return used
+
+
+def find_dead_exports(
+    root: Path, config: Config
+) -> tuple[list[Violation], int]:
+    """Scan the repo; returns (violations, pragma_suppressed_count)."""
+    export_root = root / config.export_root
+    if not export_root.is_dir():
+        return [], 0
+
+    # Parse everything once.
+    modules: dict[Path, ast.Module] = {}
+    sources: dict[Path, str] = {}
+    for usage_root in config.usage_roots:
+        base = root / usage_root
+        if not base.is_dir():
+            continue
+        for f in sorted(base.rglob("*.py")):
+            if "__pycache__" in f.parts:
+                continue
+            try:
+                src = f.read_text()
+                modules[f] = ast.parse(src, filename=str(f))
+                sources[f] = src
+            except (SyntaxError, UnicodeDecodeError):
+                continue
+
+    usage_by_file = {f: _identifiers_used(t) for f, t in modules.items()}
+
+    violations: list[Violation] = []
+    suppressed = 0
+    for f, tree in modules.items():
+        if not f.is_relative_to(export_root):
+            continue
+        rel = f.relative_to(root).as_posix()
+        pragmas = parse_pragmas(sources[f])
+        pkg_init = f.parent / "__init__.py"
+
+        def externally_used(name: str) -> bool:
+            for other, idents in usage_by_file.items():
+                if other == f or name not in idents:
+                    continue
+                if other == pkg_init:
+                    # The package __init__ re-export alone is not a use —
+                    # but an __init__ that *calls/extends* the name is.
+                    if name in _non_import_identifiers(modules[other]):
+                        return True
+                    continue
+                return True
+            return False
+
+        defs, refs, loose = _module_graph(tree)
+        live = {n for n in defs if externally_used(n)}
+        pending = set(loose)
+        for n in live:
+            pending |= refs.get(n, set())
+        while pending:
+            name = pending.pop()
+            if name in defs and name not in live:
+                live.add(name)
+                pending |= refs.get(name, set())
+
+        for name, node in _public_defs(tree).items():
+            if name in live:
+                continue
+            v = Violation(
+                rule="TCL006",
+                path=rel,
+                line=node.lineno,
+                col=node.col_offset,
+                scope="<module>",
+                message=(
+                    f"dead export: '{name}' is public but unreachable from "
+                    f"any use in src/tests/benchmarks/examples/tools — "
+                    f"delete it (or mark '# tclint: export-ok(<reason>)')"
+                ),
+                snippet=f"def-or-assign {name}",
+                end_line=node.lineno,
+            )
+            if any(
+                "TCL006" in pragmas.get(ln, ())
+                for ln in range(
+                    node.lineno - 1, (node.end_lineno or node.lineno) + 1
+                )
+            ):
+                suppressed += 1
+            else:
+                violations.append(v)
+    return violations, suppressed
+
+
+def _non_import_identifiers(tree: ast.Module) -> set[str]:
+    """Identifiers an __init__ uses outside plain import/__all__ plumbing."""
+    used: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "__all__"
+        ):
+            continue
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name):
+                used.add(n.id)
+            elif isinstance(n, ast.Attribute):
+                used.add(n.attr)
+    return used

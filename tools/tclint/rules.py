@@ -1,0 +1,680 @@
+"""Per-file tclint rules (TCL001-TCL005).
+
+Shared machinery: a function-local *device taint* analysis.  Taint seeds are
+(a) any ``jnp.*`` / ``jax.*`` call result and (b) any attribute named in
+``Config.device_attrs`` (the resident-store fields).  Taint propagates
+through assignments (including ``for`` targets, ``with ... as``, comprehension
+targets, and ``list.append/extend`` side effects), subscripts, arithmetic,
+conditional expressions, and attribute/method access on tainted values, to a
+fixpoint.  The analysis is local to each function — it does not chase
+closures or parameters — which keeps it fast and predictable; the runtime
+contracts (``repro.runtime.contracts``) cover what escapes it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.tclint import Config, Violation, snippet_of
+
+_JAX_ROOTS = {"jax", "jnp"}
+_SYNC_BUILTINS = {"int", "float", "bool"}
+_SYNC_NP_FUNCS = {"asarray", "ascontiguousarray", "array"}
+_SYNC_METHODS = {"item", "tolist"}
+_TRANSFER_FUNCS = {"device_put", "make_array_from_callback"}
+_JNP_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "arange"}
+# jnp/jax helpers whose results are *host* metadata, not device values.
+_HOST_RESULT_FUNCS = {"default_backend", "devices", "device_count", "local_devices"}
+# Attributes of a device value that live on the host (no readback to touch).
+_HOST_META_ATTRS = {
+    "shape",
+    "ndim",
+    "size",
+    "dtype",
+    "nbytes",
+    "itemsize",
+    "sharding",
+    "num_pairs",
+    "num_lanes",
+    "n_slices",
+}
+
+
+def _make_violation(
+    rule: str,
+    node: ast.AST,
+    path: str,
+    source: str,
+    scope: str,
+    message: str,
+) -> Violation:
+    return Violation(
+        rule=rule,
+        path=path,
+        line=node.lineno,
+        col=node.col_offset,
+        scope=scope,
+        message=message,
+        snippet=snippet_of(source, node),
+        end_line=getattr(node, "end_lineno", node.lineno) or node.lineno,
+    )
+
+
+def _matches(path: str, suffixes) -> bool:
+    return any(path.endswith(s) for s in suffixes)
+
+
+def _attr_root(node: ast.AST) -> str | None:
+    """Leftmost name of a dotted expression (``jax.experimental.x`` -> jax)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _func_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _iter_scopes(tree: ast.Module) -> Iterator[tuple[str, ast.AST]]:
+    """Yield (qualname, scope_node) for the module and every function."""
+    yield "<module>", tree
+
+    def walk(node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child
+                yield from walk(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def _scope_statements(scope: ast.AST) -> list[ast.stmt]:
+    """The statements belonging to a scope, excluding nested function
+    bodies (each function is analyzed as its own scope)."""
+    out: list[ast.stmt] = []
+
+    def collect(node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                continue
+            if isinstance(child, ast.stmt):
+                out.append(child)
+            collect(child)
+
+    collect(scope)
+    return out
+
+
+def _scope_nodes(scope: ast.AST) -> Iterator[ast.AST]:
+    """Every AST node in a scope exactly once, stopping at nested
+    function/class boundaries (those are scopes of their own)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class _Taint:
+    """Function-local device-taint fixpoint."""
+
+    def __init__(self, scope: ast.AST, config: Config):
+        self.config = config
+        self.device_attrs = set(config.device_attrs)
+        self.tainted: set[str] = set()
+        self.statements = _scope_statements(scope)
+        self._solve()
+
+    # -- expression query -------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _HOST_META_ATTRS:
+                return False
+            if node.attr in self.device_attrs:
+                return True
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            root = _attr_root(fn)
+            name = _func_name(node)
+            if root in _JAX_ROOTS and name not in _HOST_RESULT_FUNCS:
+                return True
+            # np.asarray(device) *returns* host data — the sync itself is
+            # the TCL001 sink; the result is clean.
+            if root == "np":
+                return False
+            if _func_name(node) in ("len",) or (
+                isinstance(fn, ast.Name) and fn.id in _SYNC_BUILTINS
+            ):
+                return False
+            # a call on a tainted callable/receiver stays on device
+            # (x.sum(), self._step(...) via tainted self.row_data args is
+            # covered by the store attrs; jitted steps by the jax root)
+            return self.is_tainted(fn)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            # comprehension over a tainted iterable yields tainted elements
+            bound = {
+                t.id
+                for gen in node.generators
+                for t in ast.walk(gen.target)
+                if isinstance(t, ast.Name)
+                and self.is_tainted(gen.iter)
+            }
+            if bound:
+                saved = self.tainted
+                self.tainted = self.tainted | bound
+                try:
+                    return self.is_tainted(node.elt)
+                finally:
+                    self.tainted = saved
+            return self.is_tainted(node.elt)
+        return False
+
+    # -- fixpoint over assignments ---------------------------------------
+    def _bind(self, target: ast.AST, tainted: bool) -> bool:
+        """Taint the names an assignment target *binds*.  Only plain names
+        (and names inside tuple/list/starred targets) bind locals —
+        ``self.row_data = ...`` stores into an attribute and must not taint
+        ``self``."""
+        if not tainted:
+            return False
+        changed = False
+        if isinstance(target, ast.Name):
+            if target.id not in self.tainted:
+                self.tainted.add(target.id)
+                changed = True
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                changed |= self._bind(elt, True)
+        elif isinstance(target, ast.Starred):
+            changed |= self._bind(target.value, True)
+        return changed
+
+    def _bind_for_target(self, target: ast.AST, it: ast.AST) -> bool:
+        """Taint a ``for`` target from its iterable.  For the common
+        literal-pairs idiom ``for a, b in ((x1, y1), (x2, y2)):`` taint is
+        tracked per position, so a host field zipped next to a device store
+        does not get smeared."""
+        if (
+            isinstance(target, (ast.Tuple, ast.List))
+            and isinstance(it, (ast.Tuple, ast.List))
+            and it.elts
+            and all(
+                isinstance(row, (ast.Tuple, ast.List))
+                and len(row.elts) == len(target.elts)
+                for row in it.elts
+            )
+        ):
+            changed = False
+            for pos, tgt in enumerate(target.elts):
+                col_tainted = any(
+                    self.is_tainted(row.elts[pos]) for row in it.elts
+                )
+                changed |= self._bind(tgt, col_tainted)
+            return changed
+        return self._bind(target, self.is_tainted(it))
+
+    def _solve(self) -> None:
+        for _ in range(10):  # fixpoint; depth bounded by assignment chains
+            changed = False
+            for stmt in self.statements:
+                if isinstance(stmt, ast.Assign):
+                    t = self.is_tainted(stmt.value)
+                    for tgt in stmt.targets:
+                        changed |= self._bind(tgt, t)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                    if stmt.value is not None and self.is_tainted(stmt.value):
+                        changed |= self._bind(stmt.target, True)
+                elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    changed |= self._bind_for_target(stmt.target, stmt.iter)
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    for item in stmt.items:
+                        if item.optional_vars is not None and self.is_tainted(
+                            item.context_expr
+                        ):
+                            changed |= self._bind(item.optional_vars, True)
+                elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+                    # pending.append(device_scalar) taints the list
+                    call = stmt.value
+                    if (
+                        isinstance(call.func, ast.Attribute)
+                        and call.func.attr in ("append", "extend", "insert")
+                        and isinstance(call.func.value, ast.Name)
+                        and any(self.is_tainted(a) for a in call.args)
+                    ):
+                        name = call.func.value.id
+                        if name not in self.tainted:
+                            self.tainted.add(name)
+                            changed = True
+            if not changed:
+                return
+
+
+# ---------------------------------------------------------------- TCL001
+
+
+def check_host_sync(
+    tree: ast.Module, path: str, source: str, config: Config
+) -> list[Violation]:
+    """TCL001: device value scalarized/materialized on the host inside an
+    execute-path module."""
+    if not _matches(path, config.execute_modules):
+        return []
+    out: list[Violation] = []
+    for qual, scope in _iter_scopes(tree):
+        taint = _Taint(scope, config)
+        for node in _scope_nodes(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            hit = None
+            if (
+                isinstance(fn, ast.Name)
+                and fn.id in _SYNC_BUILTINS
+                and node.args
+                and taint.is_tainted(node.args[0])
+            ):
+                hit = f"{fn.id}() on a device value"
+            elif (
+                isinstance(fn, ast.Attribute)
+                and fn.attr in _SYNC_NP_FUNCS
+                and _attr_root(fn) == "np"
+                and node.args
+                and taint.is_tainted(node.args[0])
+            ):
+                hit = f"np.{fn.attr}() on a device value"
+            elif (
+                isinstance(fn, ast.Attribute)
+                and fn.attr in _SYNC_METHODS
+                and taint.is_tainted(fn.value)
+            ):
+                hit = f".{fn.attr}() on a device value"
+            if hit:
+                out.append(
+                    _make_violation(
+                        "TCL001",
+                        node,
+                        path,
+                        source,
+                        qual,
+                        f"implicit host sync: {hit} — route the readback "
+                        f"through a CountFuture close or mark it "
+                        f"'# tclint: sync-ok(<reason>)'",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------- TCL002
+
+
+def check_transfers(
+    tree: ast.Module, path: str, source: str, config: Config
+) -> list[Violation]:
+    """TCL002: explicit staging API call outside the sanctioned modules."""
+    if _matches(path, config.transfer_modules):
+        return []
+    out: list[Violation] = []
+    for qual, scope in _iter_scopes(tree):
+        for node in _scope_nodes(scope):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _TRANSFER_FUNCS
+                and _attr_root(node.func) in _JAX_ROOTS
+            ):
+                out.append(
+                    _make_violation(
+                        "TCL002",
+                        node,
+                        path,
+                        source,
+                        qual,
+                        f"unsanctioned transfer: jax.{node.func.attr} "
+                        f"outside the build/staging modules — stage "
+                        f"through core.build / the executor, or mark "
+                        f"'# tclint: transfer-ok(<reason>)'",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------- TCL003
+
+
+def _jit_wrapped_functions(tree: ast.Module) -> set[str]:
+    """Names of functions that are jit/shard_map boundaries: decorated with
+    jax.jit/jit/shard_map/partial(jax.jit,...), or passed by name to a
+    jax.jit(...)/shard_map(...) call anywhere in the module."""
+    wrapped: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = (
+                    target.attr
+                    if isinstance(target, ast.Attribute)
+                    else getattr(target, "id", None)
+                )
+                if name in ("jit", "shard_map", "partial", "pjit"):
+                    wrapped.add(node.name)
+        elif isinstance(node, ast.Call):
+            name = _func_name(node)
+            if name in ("jit", "shard_map", "pjit"):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        wrapped.add(arg.id)
+    return wrapped
+
+
+def _is_pow2(v: int) -> bool:
+    return v >= 1 and (v & (v - 1)) == 0
+
+
+def _is_const_bound(node: ast.AST) -> bool:
+    """A slice bound that is static at parse time: ``7``, ``-1``, ``None``."""
+    if isinstance(node, ast.Constant):
+        return True
+    return isinstance(node, ast.UnaryOp) and isinstance(
+        node.operand, ast.Constant
+    )
+
+
+def check_retrace_hazards(
+    tree: ast.Module, path: str, source: str, config: Config
+) -> list[Violation]:
+    """TCL003: (a) eager variable-bound slice of a device value outside a
+    jit boundary — every distinct bound compiles a fresh XLA slice; (b) a
+    non-pow2 literal dimension handed to a jnp array constructor — pow2
+    buckets are the repo's zero-retrace mechanism."""
+    if not _matches(path, config.execute_modules):
+        return []
+    jit_fns = _jit_wrapped_functions(tree)
+    out: list[Violation] = []
+    for qual, scope in _iter_scopes(tree):
+        # Slices inside a jit-wrapped function trace once per shape bucket;
+        # dynamic bounds there are static during tracing.
+        inside_jit = any(part in jit_fns for part in qual.split("."))
+        taint = _Taint(scope, config)
+        for node in _scope_nodes(scope):
+            if (
+                not inside_jit
+                and isinstance(node, ast.Subscript)
+                and isinstance(node.slice, ast.Slice)
+                and taint.is_tainted(node.value)
+            ):
+                bounds = (node.slice.lower, node.slice.upper)
+                if any(
+                    b is not None and not _is_const_bound(b) for b in bounds
+                ):
+                    out.append(
+                        _make_violation(
+                            "TCL003",
+                            node,
+                            path,
+                            source,
+                            qual,
+                            "retrace hazard: eager variable-bound slice "
+                            "of a device value — each distinct bound "
+                            "compiles; use a jitted dynamic_slice window "
+                            "(core.executor._resident_window) or mark "
+                            "'# tclint: retrace-ok(<reason>)'",
+                        )
+                    )
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if (
+                    isinstance(fn, ast.Attribute)
+                    and fn.attr in _JNP_CONSTRUCTORS
+                    and _attr_root(fn) == "jnp"
+                    and node.args
+                ):
+                    shape = node.args[0]
+                    dims = (
+                        shape.elts
+                        if isinstance(shape, ast.Tuple)
+                        else [shape]
+                    )
+                    bad = [
+                        d.value
+                        for d in dims
+                        if isinstance(d, ast.Constant)
+                        and isinstance(d.value, int)
+                        and d.value > 1
+                        and not _is_pow2(d.value)
+                    ]
+                    if bad:
+                        out.append(
+                            _make_violation(
+                                "TCL003",
+                                node,
+                                path,
+                                source,
+                                qual,
+                                f"retrace hazard: non-pow2 literal "
+                                f"shape {bad} in jnp.{fn.attr} — pad to "
+                                f"a pow2 bucket (core.plan.pow2_ceil) "
+                                f"or mark "
+                                f"'# tclint: retrace-ok(<reason>)'",
+                            )
+                        )
+    return out
+
+
+# ---------------------------------------------------------------- TCL004
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {
+        n.id if isinstance(n, ast.Name) else n.attr
+        for n in ast.walk(node)
+        if isinstance(n, (ast.Name, ast.Attribute))
+    }
+
+
+def check_int32_products(
+    tree: ast.Module, path: str, source: str, config: Config
+) -> list[Violation]:
+    """TCL004: pair/word/bit quantity products with no int32 guard in scope.
+
+    Flags ``A * B`` where both operands reference quantity names, ``A * k``
+    / ``A << k`` where A references a quantity and k is a literal >= 32 (the
+    bits-per-word factor), unless the enclosing function references one of
+    the guard names (INT32_SAFE_WORDS / clamp_chunk_pairs / ...).
+    """
+    if not _matches(path, config.execute_modules):
+        return []
+    quantities = set(config.quantity_names)
+    guards = set(config.guard_names)
+    out: list[Violation] = []
+    for qual, scope in _iter_scopes(tree):
+        nodes = list(_scope_nodes(scope))
+        scope_names = set()
+        for n in nodes:
+            if isinstance(n, ast.Name):
+                scope_names.add(n.id)
+            elif isinstance(n, ast.Attribute):
+                scope_names.add(n.attr)
+        if scope_names & guards:
+            continue  # guard dominates the whole function
+        for node in nodes:
+            if not isinstance(node, ast.BinOp) or not isinstance(
+                node.op, (ast.Mult, ast.LShift, ast.Pow)
+            ):
+                continue
+            ln = _names_in(node.left) & quantities
+            rn = _names_in(node.right) & quantities
+            big_literal = any(
+                isinstance(side, ast.Constant)
+                and isinstance(side.value, int)
+                and side.value >= 32
+                for side in (node.left, node.right)
+            )
+            shift = isinstance(node.op, ast.LShift) and (ln or rn)
+            if (ln and rn) or ((ln or rn) and big_literal) or shift:
+                out.append(
+                    _make_violation(
+                        "TCL004",
+                        node,
+                        path,
+                        source,
+                        qual,
+                        "possible int32 overflow: quantity product "
+                        "with no INT32_SAFE-style guard in scope — "
+                        "clamp via core.plan.clamp_chunk_pairs / check "
+                        "against kernels.ops.INT32_SAFE_WORDS, or mark "
+                        "'# tclint: overflow-ok(<reason>)'",
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------- TCL005
+
+
+def check_donation_reuse(
+    tree: ast.Module, path: str, source: str, config: Config
+) -> list[Violation]:
+    """TCL005: a name is passed in a donated position of a jitted function
+    and referenced again afterwards in the same scope (donated buffers are
+    invalidated by XLA; the reuse reads freed memory on real backends).
+
+    Only literal ``donate_argnums`` on ``jax.jit(fn, ...)`` assignments
+    resolved within the module are checked — dynamic donation tables (the
+    executor's lru-cached step factory) are covered by tests, not lint.
+    """
+    donated_fns: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        call = node.value
+        if _func_name(call) != "jit":
+            continue
+        for kw in call.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            nums: tuple[int, ...] | None = None
+            if isinstance(kw.value, ast.Constant) and isinstance(kw.value.value, int):
+                nums = (kw.value.value,)
+            elif isinstance(kw.value, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in kw.value.elts
+            ):
+                nums = tuple(e.value for e in kw.value.elts)
+            if nums is None:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    donated_fns[tgt.id] = nums
+    if not donated_fns:
+        return []
+
+    out: list[Violation] = []
+    for qual, scope in _iter_scopes(tree):
+        stmts = _scope_statements(scope)
+        seen_calls: set[int] = set()  # nested stmts repeat in `stmts`
+        for i, stmt in enumerate(stmts):
+            for node in ast.walk(stmt):
+                if not (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donated_fns
+                ):
+                    continue
+                if id(node) in seen_calls:
+                    continue
+                seen_calls.add(id(node))
+                donated_names = {
+                    node.args[p].id
+                    for p in donated_fns[node.func.id]
+                    if p < len(node.args) and isinstance(node.args[p], ast.Name)
+                }
+                if not donated_names:
+                    continue
+                # Rebinding the result to the donated name is the sanctioned
+                # idiom (acc = step(..., acc)); drop names the same
+                # statement reassigns.
+                rebound: set[str] = set()
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        rebound |= {
+                            t.id
+                            for t in ast.walk(tgt)
+                            if isinstance(t, ast.Name)
+                        }
+                elif isinstance(stmt, ast.AugAssign) and isinstance(
+                    stmt.target, ast.Name
+                ):
+                    rebound.add(stmt.target.id)
+                live = donated_names - rebound
+                if not live:
+                    continue
+                for later in stmts[i + 1 :]:
+                    # `stmts` interleaves nesting levels; only statements
+                    # strictly after the donating call are reuse sites.
+                    if later.lineno <= (node.end_lineno or node.lineno):
+                        continue
+                    reused = {
+                        n.id
+                        for n in ast.walk(later)
+                        if isinstance(n, ast.Name)
+                        and isinstance(n.ctx, ast.Load)
+                        and n.id in live
+                    }
+                    # a later rebind kills the stale reference
+                    if isinstance(later, ast.Assign):
+                        for tgt in later.targets:
+                            live -= {
+                                t.id
+                                for t in ast.walk(tgt)
+                                if isinstance(t, ast.Name)
+                            }
+                    if reused:
+                        out.append(
+                            _make_violation(
+                                "TCL005",
+                                later,
+                                path,
+                                source,
+                                qual,
+                                f"donation reuse: {sorted(reused)} passed "
+                                f"to {node.func.id} in a donate_argnums "
+                                f"position on line {node.lineno} and read "
+                                f"again here — the buffer is invalidated; "
+                                f"copy first or mark "
+                                f"'# tclint: donate-ok(<reason>)'",
+                            )
+                        )
+                        live -= reused
+                if not live:
+                    break
+    return out

@@ -32,6 +32,13 @@ Gates:
     ``count_async`` loop's graphs/sec on a 32-graph mix, every count
     bit-identical to the jnp oracle, and admission control must reject
     (and report) over-budget tenants in the tiny-budget scenario.
+  * **serve recovery** — ``bench_serve.run_durable()``: durable-serving
+    rows. WAL-on delta throughput stays within
+    ``bench_serve.WAL_OVERHEAD_GATE`` (10%) of WAL-off at snapshot
+    cadence 8; a killed WAL-backed server restores to the bit-identical
+    stream count replaying <= ``checkpoint_every`` deltas; one injected
+    dispatch failure per wave still yields every count exact through the
+    bounded solo-retry path.
   * **build parity** — the device build's worklist size and triangle count
     equal the host build's on every gate graph (the ``build`` rows also
     carry ``build_host_s``/``build_device_s`` per-stage timings so the
@@ -342,12 +349,22 @@ def run(out_path: str = "BENCH_ci.json") -> int:
     recovery_rows = _recovery_rows()
     emit_bench_json(out_path, "recovery", recovery_rows)
 
-    from benchmarks.bench_serve import SERVE_GATE_RATIO
+    from benchmarks.bench_serve import (
+        SERVE_GATE_RATIO,
+        WAL_CHECKPOINT_EVERY,
+        WAL_OVERHEAD_GATE,
+        run_durable as serve_durable_run,
+    )
     from benchmarks.bench_serve import run as serve_run
 
     serve_rows, serve_failures = serve_run()
     emit_bench_json(out_path, "serve", serve_rows,
                     gates={"serve_gate_ratio": SERVE_GATE_RATIO})
+
+    serve_rec_rows, serve_rec_failures = serve_durable_run()
+    emit_bench_json(out_path, "serve_recovery", serve_rec_rows,
+                    gates={"wal_overhead": WAL_OVERHEAD_GATE,
+                           "checkpoint_every": WAL_CHECKPOINT_EVERY})
 
     from benchmarks.bench_streaming import STREAM_GATE_SPEEDUP
     from benchmarks.bench_streaming import print_rows as stream_print
@@ -363,6 +380,7 @@ def run(out_path: str = "BENCH_ci.json") -> int:
           f"{len(build_rows)} build configs, "
           f"{len(recovery_rows)} recovery configs, "
           f"{len(serve_rows)} serve configs, "
+          f"{len(serve_rec_rows)} serve-recovery scenarios, "
           f"{len(stream_rows)} streaming configs")
 
     failures = [
@@ -449,6 +467,38 @@ def run(out_path: str = "BENCH_ci.json") -> int:
             f"rejects={adm['rejected']}/{adm['submitted']}"
         )
 
+    for r in serve_rec_rows:
+        status = "FAIL" if r in serve_rec_failures else "ok"
+        if r["scenario"] == "wal_overhead":
+            print(
+                f"  [{status}] serve_recovery wal_overhead: "
+                f"{r['deltas_per_s_wal_on']:.0f} vs "
+                f"{r['deltas_per_s_wal_off']:.0f} deltas/s "
+                f"({100 * r['wal_overhead']:+.1f}%, gate "
+                f"{100 * WAL_OVERHEAD_GATE:.0f}% at cadence "
+                f"{r['checkpoint_every']}) p50/p99 WAL-on "
+                f"{r['p50_wal_on_ms']:.1f}/{r['p99_wal_on_ms']:.1f}ms "
+                f"counts {'match' if r['counts_ok'] else 'MISMATCH'}"
+            )
+        elif r["scenario"] == "kill_restore":
+            print(
+                f"  [{status}] serve_recovery kill_restore: "
+                f"replayed={r['replayed']} "
+                f"(gate <= {r['checkpoint_every']}) "
+                f"requeued={r['requeued']} "
+                f"restore={r['restore_ms']:.1f}ms counts "
+                f"{'identical' if r['counts_identical'] else 'MISMATCH'}"
+            )
+        else:
+            print(
+                f"  [{status}] serve_recovery faulted_wave: "
+                f"{r['injected_failures']} injected / "
+                f"{r['retries']} retried over {r['rounds']} waves, "
+                f"{r['graphs_per_s']:.0f} g/s p50/p99 "
+                f"{r['p50_ms']:.1f}/{r['p99_ms']:.1f}ms counts "
+                f"{'match' if r['counts_ok'] else 'MISMATCH'}"
+            )
+
     stream_print(stream_rows, stream_failures)
 
     lint_failures = lint_result.violations
@@ -492,6 +542,11 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print(f"serve gate FAILED for {len(serve_failures)} config(s)")
     else:
         print("serve gate passed")
+    if serve_rec_failures:
+        print(f"serve-recovery gate FAILED for "
+              f"{len(serve_rec_failures)} scenario(s)")
+    else:
+        print("serve-recovery gate passed")
     if stream_failures:
         print(f"streaming gate FAILED for {len(stream_failures)} config(s)")
     else:
@@ -503,7 +558,8 @@ def run(out_path: str = "BENCH_ci.json") -> int:
         print("lint gate passed")
     return 1 if (
         failures or step_failures or build_failures or recovery_failures
-        or serve_failures or stream_failures or lint_failures
+        or serve_failures or serve_rec_failures or stream_failures
+        or lint_failures
     ) else 0
 
 

@@ -205,6 +205,19 @@ class CheckpointManager:
     def latest_step(self):
         return latest_step(self.directory)
 
+    def gc_orphans(self) -> int:
+        """Delete uncommitted ``.tmp_step_*`` leftovers; returns how many.
+
+        A save killed between staging and the sentinel rename leaves a tmp
+        directory that discovery already ignores; restore paths call this so
+        a crash-recovered process also reclaims the disk immediately instead
+        of waiting for the next save's ``_gc``.
+        """
+        orphans = list(self.directory.glob(".tmp_step_*"))
+        for p in orphans:
+            shutil.rmtree(p, ignore_errors=True)
+        return len(orphans)
+
     def _gc(self):
         steps = sorted(
             p
@@ -213,5 +226,4 @@ class CheckpointManager:
         )
         for p in steps[: -self.keep_last]:
             shutil.rmtree(p, ignore_errors=True)
-        for p in self.directory.glob(".tmp_step_*"):
-            shutil.rmtree(p, ignore_errors=True)
+        self.gc_orphans()

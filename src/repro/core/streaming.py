@@ -173,8 +173,24 @@ class StreamingTCState:
     ``Sharded2DExecutor`` (host build only — the planner needs host
     arrays).
 
+    Durability / degradation hooks (used by ``launch.tc_serve``):
+
+    * ``snapshot_tree()`` / ``from_snapshot()`` — the stream as a flat
+      pytree of host arrays plus a metadata dict, round-trippable through
+      ``checkpoint.store`` without re-running the seed count.
+    * ``spill()`` / ``ensure_resident()`` — drop the device-resident
+      executor (the host ``_sbf`` mirror stays authoritative) and rebuild
+      it later, count-preserving, no recount.
+    * ``compact()`` — rebuild the SBF from the live edge set, dropping the
+      all-zero records removals leave behind (``zero_record_ratio``).
+
     Not thread-safe; one stream mutates one executor's stores.
     """
+
+    _SNAP_LEAVES = (
+        "keys", "row_ptr", "row_slice_idx", "row_slice_data",
+        "col_ptr", "col_slice_idx", "col_slice_data",
+    )
 
     def __init__(
         self,
@@ -218,12 +234,7 @@ class StreamingTCState:
         self._keys_t = np.sort(self._transpose_keys(keys))  # dst-major
         g = build_graph(self.current_edges(), n=self.n, reorder=False)
         self._sbf = sbf_mod.build_sbf(g, slice_bits)
-        if mesh is not None:
-            self.executor = self._make_sharded(self._sbf)
-        else:
-            self.executor = Executor(
-                self._sbf, mode=_STREAM_MODE[backend], chunk_pairs=chunk_pairs
-            )
+        self.executor = self._make_executor(self._sbf)
         # Seed count: the full worklist, once — batches never recount it.
         self.triangles = int(self.executor.count(sbf_mod.build_worklist(g, self._sbf)))
         self.batches = 0
@@ -247,6 +258,13 @@ class StreamingTCState:
             self._mesh,
             chunk_pairs=self._chunk_pairs,
             schedule=self._schedule,
+        )
+
+    def _make_executor(self, sb: sbf_mod.SlicedBitmap):
+        if self._mesh is not None:
+            return self._make_sharded(sb)
+        return Executor(
+            sb, mode=_STREAM_MODE[self.backend], chunk_pairs=self._chunk_pairs
         )
 
     def _touched(
@@ -351,6 +369,153 @@ class StreamingTCState:
         n = np.int64(self.n)
         return np.stack([self._keys // n, self._keys % n], axis=1)
 
+    # ------------------------------------------------- spill / re-admission
+
+    @property
+    def resident(self) -> bool:
+        """Whether a device-resident executor currently backs this stream."""
+        return self.executor is not None
+
+    def spill(self) -> None:
+        """Drop the device-resident executor; host state stays authoritative.
+
+        The host mirror (``_sbf``), the sorted edge keys, and the running
+        count fully determine the stream, so a spilled stream gives its
+        device store bytes back to the serving budget and a later
+        ``ensure_resident()`` rebuilds the executor without a recount.
+        Deltas close synchronously (``apply_batch`` resolves both futures
+        before returning), so there is never an in-flight future to strand.
+        """
+        self.executor = None
+
+    def ensure_resident(self) -> bool:
+        """Rebuild the executor after ``spill()``; True when it had to."""
+        if self.executor is not None:
+            return False
+        self.executor = self._make_executor(self._sbf)
+        return True
+
+    # ------------------------------------------------------------ compaction
+
+    def zero_record_ratio(self) -> float:
+        """Fraction of stored slice records whose data words are all zero.
+
+        Removals clear slice words in place (positions never shift), so a
+        remove-heavy stream accumulates dead records that pad every delta
+        worklist's pair bucket; this ratio is the compaction trigger.
+        """
+        # tclint: sync-ok(self._sbf is the authoritative host mirror - numpy, no device readback)
+        row = np.asarray(self._sbf.row_slice_data)
+        # tclint: sync-ok(host mirror, numpy already on host)
+        col = np.asarray(self._sbf.col_slice_data)
+        total = len(row) + len(col)
+        if total == 0:
+            return 0.0
+        zeros = int((~row.any(axis=1)).sum()) + int((~col.any(axis=1)).sum())
+        return zeros / total
+
+    def compact(self) -> dict:
+        """Rebuild the SBF from the live edge set, dropping zero records.
+
+        The running count is a function of the live edge set only, so the
+        rebuild is count-preserving by construction (property-tested); the
+        resident stores re-adopt the compacted layout wholesale. Steady
+        signatures are cleared — store shapes changed, so the next batch of
+        each bucket legitimately compiles once.
+        Returns ``{"records_before", "records_after"}``.
+        """
+        sb = self._sbf
+        before = int(len(sb.row_slice_idx)) + int(len(sb.col_slice_idx))
+        g = build_graph(self.current_edges(), n=self.n, reorder=False)
+        self._sbf = sbf_mod.build_sbf(g, self.slice_bits)
+        after = int(len(self._sbf.row_slice_idx)) + int(
+            len(self._sbf.col_slice_idx)
+        )
+        if self.executor is not None:
+            if self._mesh is not None:
+                self.executor = self._make_sharded(self._sbf)
+            else:
+                self.executor.adopt_stores(self._sbf)
+        self._steady_sigs.clear()
+        return {"records_before": before, "records_after": after}
+
+    # ---------------------------------------------------------- durability
+
+    def snapshot_tree(self) -> tuple[dict, dict]:
+        """The stream as ``(pytree, extra)`` for ``checkpoint.store``.
+
+        The tree is flat host arrays (edge keys + the six SBF arrays);
+        ``extra`` carries the scalars. ``from_snapshot`` round-trips both
+        without re-running the seed count — ``triangles`` is trusted, which
+        is safe because snapshots are only taken from a live state whose
+        count the streaming protocol maintains exactly.
+        """
+        sb = self._sbf
+        tree = {
+            "keys": self._keys,
+            "row_ptr": sb.row_ptr,
+            "row_slice_idx": sb.row_slice_idx,
+            "row_slice_data": sb.row_slice_data,
+            "col_ptr": sb.col_ptr,
+            "col_slice_idx": sb.col_slice_idx,
+            "col_slice_data": sb.col_slice_data,
+        }
+        extra = {
+            "n": int(self.n),
+            "slice_bits": int(self.slice_bits),
+            "n_slices": int(sb.n_slices),
+            "backend": self.backend,
+            "triangles": int(self.triangles),
+            "batches": int(self.batches),
+        }
+        return tree, extra
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        tree: dict,
+        extra: dict,
+        *,
+        backend: str | None = None,
+        chunk_pairs: int = 1 << 20,
+        mesh=None,
+        schedule: str = "packed",
+        build: str = "auto",
+    ) -> "StreamingTCState":
+        """Rebuild a stream from ``snapshot_tree()`` output — no recount."""
+        self = cls.__new__(cls)
+        backend = backend or extra.get("backend", "pallas_total")
+        if backend not in _STREAM_MODE:
+            raise ValueError(f"backend {backend!r} not in {STREAM_BACKENDS}")
+        self.n = int(extra["n"])
+        self.slice_bits = int(extra["slice_bits"])
+        self.backend = backend
+        self._build = build
+        self._chunk_pairs = chunk_pairs
+        self._mesh = mesh
+        self._schedule = schedule
+        self._use_device_build = build == "device" or (
+            build == "auto" and mesh is None and jax.default_backend() != "cpu"
+        )
+        self._keys = np.asarray(tree["keys"], dtype=np.int64)
+        self._keys_t = np.sort(self._transpose_keys(self._keys))
+        self._sbf = sbf_mod.SlicedBitmap(
+            slice_bits=self.slice_bits,
+            n=self.n,
+            n_slices=int(extra["n_slices"]),
+            row_ptr=np.asarray(tree["row_ptr"]),
+            row_slice_idx=np.asarray(tree["row_slice_idx"]),
+            row_slice_data=np.asarray(tree["row_slice_data"]),
+            col_ptr=np.asarray(tree["col_ptr"]),
+            col_slice_idx=np.asarray(tree["col_slice_idx"]),
+            col_slice_data=np.asarray(tree["col_slice_data"]),
+        )
+        self.executor = self._make_executor(self._sbf)
+        self.triangles = int(extra["triangles"])
+        self.batches = int(extra["batches"])
+        self._steady_sigs = set()
+        return self
+
     def apply_batch(self, added=None, removed=None) -> DeltaResult:
         """Apply one edge batch; returns the updated running count.
 
@@ -374,6 +539,9 @@ class StreamingTCState:
         ka = a[:, 0] * n + a[:, 1]
         kr = r[:, 0] * n + r[:, 1]
         self._validate(ka, kr)
+        # Transparent re-admission: a spilled stream rebuilds its executor
+        # from the host mirror on the first non-empty batch that touches it.
+        self.ensure_resident()
         vr = np.unique(np.concatenate([a[:, 0], r[:, 0]]))
         vc = np.unique(np.concatenate([a[:, 1], r[:, 1]]))
 

@@ -322,6 +322,18 @@ class ResilienceConfig:
             return 0
         return seq[min(failure, len(seq)) - 1]
 
+    def for_request(self, request_id: int) -> "ResilienceConfig":
+        """A copy rooted at a per-request checkpoint subdirectory.
+
+        The serving layer runs many sharded solos against one configured
+        resilience policy; giving each request its own ``req_<id>`` subtree
+        keeps their cursors/snapshots from clobbering each other while
+        sharing every other knob (injector included — deliberately, so a
+        soak's step counter spans the whole drain)."""
+        return dataclasses.replace(
+            self, checkpoint_dir=Path(self.checkpoint_dir) / f"req_{request_id}"
+        )
+
 
 def _build_executor(
     sbf: SlicedBitmap,

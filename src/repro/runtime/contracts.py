@@ -26,14 +26,18 @@ Three contracts are provided, each usable as a decorator or context manager:
     device buffers zero-copy through the buffer protocol, below anything the
     Python layer can intercept — the static rule TCL001 covers that idiom.)
     Explicit staging (``jax.device_put``) stays legal, so dispatch paths can
-    still upload chunk indices.
+    still upload chunk indices.  Scoped to the *entering thread*: the
+    raising stubs arm a thread-local flag, so a concurrent stream's
+    legitimate readback at its own future close passes through (the jax
+    transfer guard is config-scoped, which is already thread-local).
 
 ``max_transfers(n)``
     The guarded region may perform at most ``n`` explicit staging calls
     (``jax.device_put`` / ``jax.make_array_from_callback``).  The staging
-    APIs are patch-counted for the duration of the region; the repo is
-    documented single-submitter (see ``launch/tc_serve.py``), so the patch
-    window is not a concurrency hazard.  (No host-to-device transfer guard
+    APIs are patch-counted for the duration of the region, and only calls
+    from the entering thread charge the budget — a concurrent stream
+    staging on another thread passes through uncounted.  (No host-to-device
+    transfer guard
     here: ``make_array_from_callback`` stages its shards through jax's
     *implicit* transfer path, so a guard would veto sanctioned staging.)
 
@@ -43,8 +47,13 @@ Three contracts are provided, each usable as a decorator or context manager:
     ("Compiling <name> with global shapes and types ...") on the lowering
     logger — one record per real compile, cache hits emit nothing — which is
     precise for the ``n == 0`` steady-state case the streaming and pool paths
-    promise.  Note sub-jits (e.g. ``convert_element_type``) count too, so
-    budgets for ``n > 0`` regions should be calibrated, not assumed.
+    promise.  The count is scoped to the *entering thread*: jax compiles
+    synchronously on the thread that dispatched, so thread identity is
+    executor/stream identity (streams are documented single-threaded), and a
+    concurrent stream warming up on another thread no longer trips a steady
+    stream's ``max_retrace(0)`` window.  Note sub-jits (e.g.
+    ``convert_element_type``) count too, so budgets for ``n > 0`` regions
+    should be calibrated, not assumed.
 
 Contract breaches raise :class:`ContractViolation` (a ``RuntimeError``), with
 the original ``XlaRuntimeError`` chained when the breach came from a transfer
@@ -56,6 +65,7 @@ from __future__ import annotations
 import functools
 import logging
 import os
+import threading
 from contextlib import ExitStack
 from typing import Callable, Optional
 
@@ -157,8 +167,13 @@ class _Contract:
 # Blocking-readback entry points on jax's concrete array type.  These are
 # plain Python attributes on the (C++-backed) ArrayImpl class, so they can be
 # swapped for raising stubs and restored; nested regions chain save/restore
-# correctly (the inner region restores the outer region's stubs).
+# correctly (the inner region restores the outer region's stubs).  The stubs
+# are armed per-thread (_SYNC_TLS): a guarded dispatch on one stream's thread
+# must not veto a concurrent stream's legitimate readback at its own future
+# close — same scoping rule as max_retrace.
 _SYNC_DUNDERS = ("__int__", "__float__", "__bool__", "__index__", "item", "tolist")
+
+_SYNC_TLS = threading.local()
 
 
 def _array_impl():
@@ -180,19 +195,32 @@ class no_host_sync(_Contract):
     def _enter(self, stack: ExitStack) -> None:
         import jax
 
+        # The transfer guard is jax-config-scoped, which is already
+        # thread-local; only the dunder stubs need explicit TLS arming.
         stack.enter_context(jax.transfer_guard_device_to_host("disallow"))
+        _SYNC_TLS.depth = getattr(_SYNC_TLS, "depth", 0) + 1
+        stack.callback(
+            lambda: setattr(_SYNC_TLS, "depth", getattr(_SYNC_TLS, "depth", 1) - 1)
+        )
         impl = _array_impl()
         if impl is None:  # pragma: no cover - jax layout drift
             return
         saved = {name: getattr(impl, name) for name in _SYNC_DUNDERS}
 
         def _make_stub(name):
+            orig = saved[name]
+
             def stub(self, *args, **kwargs):
-                raise ContractViolation(
-                    f"no_host_sync: implicit host sync via jax.Array.{name} "
-                    f"inside a guarded dispatch region (route the readback "
-                    f"through the CountFuture close instead)"
-                )
+                if getattr(_SYNC_TLS, "depth", 0) > 0:
+                    raise ContractViolation(
+                        f"no_host_sync: implicit host sync via "
+                        f"jax.Array.{name} inside a guarded dispatch region "
+                        f"(route the readback through the CountFuture close "
+                        f"instead)"
+                    )
+                # Another thread's readback while this thread's region is
+                # armed: pass through to the saved implementation.
+                return orig(self, *args, **kwargs)
 
             return stub
 
@@ -221,15 +249,20 @@ class max_transfers(_Contract):
         import jax
 
         self.count = 0
+        # Per-thread scope: a concurrent stream's staging on another thread
+        # must not charge this region's budget (same rule as max_retrace).
+        tid = threading.get_ident()
         orig_put = jax.device_put
         orig_mafc = jax.make_array_from_callback
 
         def counting_put(*args, **kwargs):
-            self.count += 1
+            if threading.get_ident() == tid:
+                self.count += 1
             return orig_put(*args, **kwargs)
 
         def counting_mafc(*args, **kwargs):
-            self.count += 1
+            if threading.get_ident() == tid:
+                self.count += 1
             return orig_mafc(*args, **kwargs)
 
         jax.device_put = counting_put
@@ -259,13 +292,29 @@ _COMPILE_LOGGER_NAMES = ("jax._src.interpreters.pxla", "jax._src.dispatch")
 
 
 class _CompileCounter(logging.Handler):
+    """Counts compile records globally and per emitting thread.
+
+    jax compiles synchronously on the dispatching thread, so
+    ``record.thread`` identifies which executor/stream compiled —
+    ``max_retrace`` windows read their own thread's counter and stay blind
+    to concurrent streams' warmups (``Handler.handle`` serializes ``emit``
+    under the handler lock, so the dict mutation is safe).
+    """
+
     def __init__(self):
         super().__init__(level=logging.DEBUG)
         self.total = 0
+        self.by_thread: dict[int, int] = {}
 
     def emit(self, record: logging.LogRecord) -> None:
         if record.getMessage().startswith("Compiling "):
             self.total += 1
+            tid = record.thread
+            self.by_thread[tid] = self.by_thread.get(tid, 0) + 1
+
+    def thread_total(self) -> int:
+        """Compiles emitted by the calling thread since the listener armed."""
+        return self.by_thread.get(threading.get_ident(), 0)
 
 
 class _CompileListener:
@@ -310,10 +359,12 @@ class max_retrace(_Contract):
     def _enter(self, stack: ExitStack) -> None:
         _LISTENER.acquire()
         stack.callback(_LISTENER.release)
-        self._start = _LISTENER.handler.total
+        # Per-thread scope: only compiles dispatched by the thread that
+        # entered the region count against its budget (see _CompileCounter).
+        self._start = _LISTENER.handler.thread_total()
 
         def snapshot():
-            self.compiles = _LISTENER.handler.total - self._start
+            self.compiles = _LISTENER.handler.thread_total() - self._start
 
         # Snapshot before release runs (callbacks fire LIFO).
         stack.callback(snapshot)

@@ -89,16 +89,34 @@ class CountInterrupted(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raise SimulatedFailure the first time each configured step is reached."""
+    """Raise SimulatedFailure at configured steps (each at most ``repeats``
+    times, default once — the classic transient fault).
+
+    ``fail_at_steps`` arms specific step indices; ``fail_every`` arms every
+    positive multiple of a period on top (the serving soak's "one injected
+    failure per wave"). ``repeats > 1`` makes an armed step keep firing on
+    re-checks — how a *hard* failure that survives bounded retries is
+    modeled (the serving layer re-checks the same request id per attempt).
+    """
 
     fail_at_steps: tuple[int, ...] = ()
+    fail_every: int = 0
+    repeats: int = 1
 
     def __post_init__(self):
-        self._fired: set[int] = set()
+        self._fired: dict[int, int] = {}
+
+    @property
+    def failures(self) -> int:
+        """Total injected failures so far."""
+        return sum(self._fired.values())
 
     def check(self, step: int):
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
+        armed = step in self.fail_at_steps or (
+            self.fail_every > 0 and step > 0 and step % self.fail_every == 0
+        )
+        if armed and self._fired.get(step, 0) < self.repeats:
+            self._fired[step] = self._fired.get(step, 0) + 1
             raise SimulatedFailure(f"injected failure at step {step}")
 
 

@@ -181,3 +181,114 @@ def test_streaming_delta_clean_under_contracts(contracts_on):
         tcim_count_delta(state, edges_added=edges[lo : lo + 15])
     g = build_graph(edges, n=64, reorder=False)
     assert state.triangles == triangles_intersection(g)
+
+
+# -- max_retrace per-thread scoping ----------------------------------------
+
+
+def test_max_retrace_scoped_to_entering_thread(contracts_on):
+    """A concurrent thread's fresh compiles don't count against this
+    thread's max_retrace window — the counter reads the compile log's
+    per-record thread id."""
+    import threading
+
+    from repro.runtime.contracts import _LISTENER
+
+    @jax.jit
+    def f(x):
+        return x * 3
+
+    f(jnp.ones(32, jnp.float32))  # warm the entering thread's shape
+    errs = []
+    saw_other_compile = []
+
+    def other_thread():
+        try:
+            # Fresh shape: a real XLA compile, on this other thread.
+            f(jnp.ones(33, jnp.float32))
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    with max_retrace(0) as ct:
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+        saw_other_compile.append(_LISTENER.handler.total)
+        f(jnp.ones(32, jnp.float32))  # warm: zero compiles HERE
+    assert not errs
+    assert ct.compiles == 0  # the window ignored the other thread
+    assert saw_other_compile[0] >= 1  # ...but the compile really happened
+    # Control: the same fresh shape on the entering thread still trips.
+    with pytest.raises(ContractViolation, match="max_retrace"):
+        with max_retrace(0):
+            f(jnp.ones(34, jnp.float32))
+
+
+def test_max_retrace_isolates_interleaved_stream_warmup(contracts_on):
+    """Two streams on two threads: stream B warming up (fresh-bucket
+    compiles) must not trip steady stream A's internal max_retrace(0)
+    guard (streaming.apply_batch arms it for known signatures)."""
+    import threading
+
+    from repro.core.streaming import StreamingTCState
+    from repro.graphs import build_graph, rmat
+
+    g_a = build_graph(rmat(300, 1800, seed=41), reorder=False)
+    hold = g_a.edges[:64]
+    state_a = StreamingTCState(g_a.edges[64:], n=g_a.n)
+    # Warmup cycle: the add/remove signatures become steady for A.
+    state_a.apply_batch(added=hold)
+    state_a.apply_batch(removed=hold)
+    state_a.apply_batch(added=hold)
+    state_a.apply_batch(removed=hold)
+    errs = []
+    release = threading.Event()
+
+    def warm_b():
+        try:
+            release.wait(30)
+            # A differently-bucketed stream: construction + first batches
+            # compile fresh traces on THIS thread.
+            g_b = build_graph(rmat(700, 5200, seed=42), reorder=False)
+            sb = StreamingTCState(g_b.edges[: g_b.m // 2], n=g_b.n)
+            sb.apply_batch(added=g_b.edges[g_b.m // 2 :])
+        except Exception as e:
+            errs.append(e)
+
+    t = threading.Thread(target=warm_b)
+    t.start()
+    release.set()
+    # Interleave steady batches on A while B warms up concurrently. With
+    # the old process-global counter B's compiles landed in A's window.
+    for _ in range(4):
+        r1 = state_a.apply_batch(added=hold)
+        r2 = state_a.apply_batch(removed=hold)
+        assert not r1.grew and not r2.grew
+    t.join(60)
+    assert not t.is_alive()
+    assert not errs, errs
+
+
+def test_no_host_sync_ignores_other_threads_readback(contracts_on):
+    """While this thread's dispatch region is armed, another thread's
+    readback at its own future close must pass through — the stubs arm a
+    thread-local flag, not a process-global veto."""
+    import threading
+
+    got = []
+    errs = []
+
+    def other_thread():
+        try:
+            got.append(int(jnp.arange(8).sum()))  # legal: no region HERE
+        except Exception as e:
+            errs.append(e)
+
+    with no_host_sync():
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+        with pytest.raises(ContractViolation, match="no_host_sync"):
+            _sync_scalar()  # still trips on the entering thread
+    assert not errs, errs
+    assert got == [28]
